@@ -1,0 +1,130 @@
+"""Shared benchmark machinery: one simulator run = one (dataset, rate,
+scheduler, router, mode) cell; results as dict rows, JSON-dumped to
+experiments/results/ and summarized as CSV on stdout."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core import (EngineConfig, GoRouting, MinLoad, RoundRobin,
+                        RouterConfig, make_policy)
+from repro.core.slidebatching import SlideBatching
+from repro.sim import (AnalyticalExecutor, ClusterConfig, ClusterSim,
+                       EngineSim, InstanceHardware, QWEN2_7B, QWEN3_32B,
+                       summarize)
+from repro.sim.workloads import WORKLOADS
+
+RESULTS_DIR = "experiments/results"
+
+_EXEC_CACHE = {}
+
+
+def get_exec(model_name: str = "qwen2-7b", chips: int = 4):
+    key = (model_name, chips)
+    if key not in _EXEC_CACHE:
+        model = QWEN2_7B if model_name == "qwen2-7b" else QWEN3_32B
+        ex = AnalyticalExecutor(model, InstanceHardware(chips=chips))
+        est, mape = ex.fit_estimator(n=300)
+        _EXEC_CACHE[key] = (ex, est, mape)
+    return _EXEC_CACHE[key]
+
+
+def make_sched(name: str, **kw):
+    if name.startswith("slide"):
+        parts = dict()
+        if "only_deadline" in name:
+            parts = dict(use_density=False)
+        elif "only_density" in name:
+            parts = dict(use_deadline=False)
+        elif "no_latency" in name:
+            parts = dict(latency_aware_budget=False)
+        return SlideBatching(**parts)
+    return make_policy(name)
+
+
+def run_single_node(dataset: str, rate: float, sched: str, *,
+                    model: str = "qwen2-7b", duration: float = 20.0,
+                    seed: int = 0, w_p: float = 4.0, chips: int = 4,
+                    eng_cfg: EngineConfig | None = None,
+                    bm_kwargs: dict | None = None, spec=None,
+                    num_blocks: int | None = None,
+                    t_block_scale: float = 1.0):
+    ex, est, _ = get_exec(model, chips)
+    reqs = WORKLOADS[dataset](rate=rate, duration=duration, seed=seed,
+                              **({"spec": spec} if spec else {}))
+    cfg = eng_cfg or EngineConfig(w_p=w_p)
+    from repro.core.blocks import BlockManager
+    bm = BlockManager(num_blocks or ex.num_blocks, ex.block_size,
+                      ex.t_block * t_block_scale, beta=cfg.beta,
+                      **(bm_kwargs or {}))
+    eng = EngineSim(0, make_sched(sched), ex, est, cfg, bm)
+    pending = sorted(reqs, key=lambda r: r.arrival)
+    now, i, guard = 0.0, 0, 0
+    t0 = time.time()
+    while (i < len(pending) or eng.has_work()) and guard < 500000:
+        guard += 1
+        while i < len(pending) and pending[i].arrival <= now:
+            eng.add_request(pending[i], now)
+            i += 1
+        res = eng.step(now)
+        if res is None:
+            if i < len(pending):
+                now = pending[i].arrival
+            else:
+                break
+        else:
+            now = res.end
+    s = summarize(reqs, w_p=w_p)
+    row = {"dataset": dataset, "rate": rate, "sched": sched,
+           "model": model, **s.row(),
+           "sched_overhead_frac": _sched_overhead(eng),
+           "wall_s": round(time.time() - t0, 2)}
+    return row, reqs, eng
+
+
+def _sched_overhead(eng) -> float:
+    # iteration count * O(n log n) python scheduling vs simulated exec time
+    sim_time = sum(l for _, _, l in eng.batch_log)
+    return round(1e-4 * eng.iterations / max(sim_time, 1e-9), 6)
+
+
+def run_multi_node(dataset: str, rate: float, sched: str, router: str, *,
+                   pd_mode: str = "coloc", n_prefill: int = 4,
+                   n_decode: int = 0, model: str = "qwen2-7b",
+                   duration: float = 20.0, seed: int = 0, w_p: float = 4.0,
+                   chips: int = 4, kills=None, router_cfg=None):
+    ex, est, _ = get_exec(model, chips)
+    reqs = WORKLOADS[dataset](rate=rate, duration=duration, seed=seed)
+    if router == "gorouting":
+        rt = GoRouting(est, router_cfg or RouterConfig(pd_mode=pd_mode))
+    elif router == "round_robin":
+        rt = RoundRobin(est)
+    else:
+        rt = MinLoad(est)
+    cs = ClusterSim(lambda: make_sched(sched), rt, ex, est,
+                    EngineConfig(w_p=w_p),
+                    ClusterConfig(pd_mode=pd_mode, n_prefill=n_prefill,
+                                  n_decode=n_decode))
+    cs.run(reqs, kills=kills)
+    s = summarize(reqs, w_p=w_p)
+    return {"dataset": dataset, "rate": rate, "sched": sched,
+            "router": router, "pd": pd_mode,
+            "n_inst": n_prefill + n_decode, **s.row()}, reqs
+
+
+def save(name: str, rows) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    return path
+
+
+def emit_csv(name: str, rows, keys=("tdg_ratio", "slo")) -> None:
+    for r in rows:
+        ident = ",".join(str(r.get(k, "")) for k in
+                         ("dataset", "rate", "sched", "router", "pd")
+                         if r.get(k) is not None)
+        derived = ";".join(f"{k}={r[k]}" for k in keys if k in r)
+        print(f"{name},{ident},{derived}")

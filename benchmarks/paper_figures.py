@@ -1,0 +1,267 @@
+"""One benchmark function per paper table/figure (§3 motivation + §5 eval).
+
+Every function returns a list of result rows; ``--fast`` shrinks durations
+and sweeps so the whole suite runs on 1 CPU core in minutes.
+"""
+from __future__ import annotations
+
+from repro.core import EngineConfig, RouterConfig
+from repro.sim import gain_timeline, summarize, urgent_timeout_timeline
+from repro.sim.workloads import WORKLOADS, WorkloadSpec
+
+from .common import (get_exec, run_multi_node, run_single_node)
+
+MAIN_SCHEDS = ["slidebatching", "vllm_fcfs", "weighted_vtc", "sarathi_fcfs",
+               "sarathi_priority", "fair_batching"]
+
+
+def fig2_partition_vs_colocation(fast=True):
+    """Static per-priority partition vs ProServe co-location (industrial)."""
+    dur = 15 if fast else 60
+    rate = 90 if fast else 120
+    rows = []
+    # co-location: one 4-chip instance serves all priorities
+    row, _, _ = run_single_node("industrial", rate, "slidebatching",
+                                duration=dur, chips=4)
+    row["setting"] = "colocated"
+    rows.append(row)
+    # partition: 3 instances sized by AVERAGE class load (chips 1/1/2 of 4)
+    from repro.sim.workloads import industrial
+    reqs = industrial(rate=rate, duration=dur, seed=0)
+    by_p = {p: [r for r in reqs if r.priority == p] for p in (1, 2, 3)}
+    chips_of = {1: 1, 2: 1, 3: 2}
+    from repro.core import make_policy
+    from repro.core.blocks import BlockManager
+    from repro.sim import EngineSim
+    all_rs = []
+    for p, rs in by_p.items():
+        ex, est, _ = get_exec("qwen2-7b", chips_of[p])
+        eng = EngineSim(p, make_policy("slidebatching"), ex, est,
+                        EngineConfig(w_p=4.0))
+        pend, now, i = sorted(rs, key=lambda r: r.arrival), 0.0, 0
+        while i < len(pend) or eng.has_work():
+            while i < len(pend) and pend[i].arrival <= now:
+                eng.add_request(pend[i], now)
+                i += 1
+            res = eng.step(now)
+            if res is None:
+                if i < len(pend):
+                    now = pend[i].arrival
+                else:
+                    break
+            else:
+                now = res.end
+        all_rs += rs
+    s = summarize(all_rs, w_p=4.0)
+    rows.append({"setting": "partitioned", "dataset": "industrial",
+                 "rate": rate, "sched": "slidebatching", **s.row()})
+    return rows
+
+
+def fig3_priority_first_vs_fcfs(fast=True):
+    dur = 15 if fast else 40
+    rows = []
+    for sched in ("priority_first", "sarathi_fcfs", "slidebatching"):
+        row, _, _ = run_single_node("sharegpt", 70, sched, duration=dur)
+        rows.append(row)
+    return rows
+
+
+def fig4to8_policy_load_sweeps(fast=True):
+    """EDF vs SJF vs FCFS across loads and token budgets, heterogeneous
+    SLOs (the §3.2 adaptive-deficit study)."""
+    dur = 12 if fast else 30
+    spec = WorkloadSpec("sharegpt", mean_in=280, mean_out=230,
+                        slo_classes=((0.6, 0.05), (2.0, 0.1), (6.0, 0.2)),
+                        slo_probs=(0.3, 0.5, 0.2))
+    rows = []
+    rates = [40, 70, 100] if fast else [30, 50, 70, 90, 110]
+    for rate in rates:
+        for sched in ("edf", "sjf", "sarathi_fcfs", "slidebatching"):
+            row, _, _ = run_single_node("sharegpt", rate, sched,
+                                        duration=dur, spec=spec, seed=2)
+            rows.append(row)
+    # budget sweep (fig 8): token budget sensitivity under medium load
+    for budget in ([1024, 4096] if fast else [512, 1024, 2048, 4096, 8192]):
+        for sched in ("edf", "sjf", "sarathi_fcfs"):
+            row, _, _ = run_single_node(
+                "sharegpt", 70, sched, duration=dur, spec=spec, seed=2,
+                eng_cfg=EngineConfig(w_p=4.0, token_budget=budget))
+            row["token_budget"] = budget
+            rows.append(row)
+    return rows
+
+
+def fig12_single_node(fast=True):
+    """Main single-node comparison: datasets x rates x schedulers."""
+    dur = 12 if fast else 30
+    datasets = ["sharegpt", "azure", "burstgpt", "qwentrace"]
+    rates = {"sharegpt": [50, 80, 110], "azure": [30, 50, 70],
+             "burstgpt": [40, 70, 100], "qwentrace": [20, 35, 50]}
+    if not fast:
+        for k in rates:
+            lo, mid, hi = rates[k]
+            rates[k] = [lo * 0.6, lo, mid, hi, hi * 1.3]
+    rows = []
+    for ds in datasets:
+        for rate in rates[ds]:
+            for sched in MAIN_SCHEDS:
+                row, _, _ = run_single_node(ds, rate, sched, duration=dur)
+                rows.append(row)
+    return rows
+
+
+def fig13_14_multi_node(fast=True):
+    dur = 12 if fast else 30
+    rows = []
+    datasets = ["sharegpt", "qwentrace"] if fast else \
+        ["sharegpt", "azure", "burstgpt", "qwentrace"]
+    for pd_mode, n_p, n_d in (("disagg", 3, 1), ("coloc", 4, 0)):
+        for ds in datasets:
+            rate = 120 if ds != "qwentrace" else 45
+            for sched in ("slidebatching", "sarathi_fcfs"):
+                for router in ("gorouting", "min_load"):
+                    row, _ = run_multi_node(ds, rate, sched, router,
+                                            pd_mode=pd_mode, n_prefill=n_p,
+                                            n_decode=n_d, duration=dur)
+                    rows.append(row)
+    return rows
+
+
+def fig15_16_priorities(fast=True):
+    dur = 15 if fast else 40
+    rows = []
+    for sched in ("slidebatching", "sarathi_fcfs", "sarathi_priority"):
+        row, reqs, _ = run_single_node("sharegpt", 90, sched, duration=dur,
+                                       model="qwen3-32b", chips=8)
+        import numpy as np
+        for p in (1, 2):
+            sub = [r for r in reqs if r.priority == p]
+            ttfts = [r.ttft for r in sub if r.ttft is not None]
+            tpots = [r.tpot for r in sub if r.tpot is not None]
+            row[f"ttft_p50_prio{p}"] = round(float(np.median(ttfts)), 4) \
+                if ttfts else None
+            row[f"tpot_p50_prio{p}"] = round(float(np.median(tpots)), 4) \
+                if tpots else None
+        rows.append(row)
+    return rows
+
+
+def fig17_ablations(fast=True):
+    dur = 12 if fast else 30
+    rows = []
+    # SlideBatching component ablations at two loads
+    for rate in (60, 100):
+        for sched in ("slidebatching", "slide_only_deadline",
+                      "slide_only_density", "slide_no_latency"):
+            row, _, _ = run_single_node("sharegpt", rate, sched,
+                                        duration=dur)
+            rows.append(row)
+    # block-management ablations under a LOW memory-utilization threshold
+    # (paper: SMALL pool => memory pressure with RECOVERABLE compute —
+    # bursts evict, lulls reload; under pure compute overload the evicted
+    # tail is never readmitted and all modes coincide)
+    for name, bmk in [("full", {}), ("w/o async", {"async_offload": False}),
+                      ("w/o dynamic", {"adaptive_copy": False}),
+                      ("recompute", {"recompute_only": True})]:
+        row, _, eng = run_single_node(
+            "burstgpt", 35, "slidebatching", duration=dur,
+            bm_kwargs=bmk, num_blocks=2600)   # ~10% of the full pool
+        row["block_mgmt"] = name
+        row["reload_blocks"] = eng.bm.h2d.total_blocks
+        row["offload_blocks"] = eng.bm.d2h.total_blocks
+        rows.append(row)
+    # same ablation on a CONTENDED host link (40x slower per block):
+    # this is where the adaptive copy budget and async offload earn their
+    # keep — the paper's NPU host link is far slower than v5e PCIe
+    for name, bmk in [("full/slow", {}),
+                      ("w/o async/slow", {"async_offload": False}),
+                      ("w/o dynamic/slow", {"adaptive_copy": False}),
+                      ("recompute/slow", {"recompute_only": True})]:
+        row, _, eng = run_single_node(
+            "burstgpt", 35, "slidebatching", duration=dur,
+            bm_kwargs=bmk, num_blocks=2600, t_block_scale=40.0)
+        row["block_mgmt"] = name
+        row["reload_blocks"] = eng.bm.h2d.total_blocks
+        rows.append(row)
+    return rows
+
+
+def fig18_weight_scaling(fast=True):
+    dur = 12 if fast else 30
+    rows = []
+    for w_hi in (1.0, 2.0, 4.0, 8.0):
+        for rate in ((70, 110) if fast else (50, 80, 110, 140)):
+            spec = WorkloadSpec("sharegpt", 280, 230,
+                                weights=(w_hi, 1.0))
+            for sched in ("slidebatching", "sarathi_priority"):
+                row, _, _ = run_single_node("sharegpt", rate, sched,
+                                            duration=dur, spec=spec)
+                row["w_hi"] = w_hi
+                rows.append(row)
+    return rows
+
+
+def fig19_large_scale(fast=True):
+    """32 instances of qwen3-32b on the industrial workload."""
+    dur = 10 if fast else 30
+    n_inst = 8 if fast else 32
+    rate = 150 if fast else 600
+    rows = []
+    for sched, router in (("slidebatching", "gorouting"),
+                          ("sarathi_fcfs", "round_robin"),
+                          ("vllm_fcfs", "round_robin"),
+                          ("weighted_vtc", "round_robin")):
+        row, _ = run_multi_node("industrial", rate, sched, router,
+                                n_prefill=n_inst, duration=dur,
+                                model="qwen3-32b", chips=8)
+        rows.append(row)
+    return rows
+
+
+def fig20_gamma_sensitivity(fast=True):
+    dur = 12 if fast else 30
+    rows = []
+    for gamma in (0.01, 0.2, 0.5, 0.8, 1.0, 1.5):
+        for rate in ((70, 110) if fast else (50, 80, 110)):
+            row, _, _ = run_single_node(
+                "sharegpt", rate, "slidebatching", duration=dur,
+                eng_cfg=EngineConfig(w_p=4.0, gamma=gamma))
+            row["gamma"] = gamma
+            rows.append(row)
+    return rows
+
+
+def fig21_22_timelines(fast=True):
+    dur = 15 if fast else 60
+    out = []
+    for sched in ("slidebatching", "sarathi_fcfs"):
+        row, reqs, _ = run_single_node("azure", 60, sched, duration=dur)
+        tl = gain_timeline(reqs, bucket=1.0, w_p=4.0)
+        ut = urgent_timeout_timeline(reqs, horizon=dur * 2)
+        out.append({"sched": sched, "tdg_per_s": tl,
+                    "urgent_timeout": {k: v for k, v in ut.items()
+                                       if k != "bucket"}, **row})
+    return out
+
+
+def table_estimator_mape(fast=True):
+    """§4.1: MAPE of the fitted batch-latency estimator."""
+    rows = []
+    for model, chips in (("qwen2-7b", 4), ("qwen3-32b", 8)):
+        _, _, mape = get_exec(model, chips)
+        rows.append({"model": model, "chips": chips,
+                     "mape": round(mape, 4), "paper_mape": 0.045})
+    return rows
+
+
+def table_scheduler_overhead(fast=True):
+    """App. D.3: scheduling cost as a fraction of batch execution."""
+    row, _, eng = run_single_node("sharegpt", 60, "slidebatching",
+                                  duration=10)
+    row_f, _, eng_f = run_single_node("sharegpt", 60, "sarathi_fcfs",
+                                      duration=10)
+    return [{"sched": "slidebatching",
+             "overhead_frac": row["sched_overhead_frac"]},
+            {"sched": "sarathi_fcfs",
+             "overhead_frac": row_f["sched_overhead_frac"]}]

@@ -1,0 +1,97 @@
+"""Roofline table (deliverable g): aggregate the dry-run JSONs into the
+per-(arch x shape x mesh) roofline table for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HEADERS = ["arch", "shape", "mesh", "GiB/dev", "fits",
+           "compute_s", "memory_s", "coll_s", "dominant",
+           "useful_ratio", "roofline_frac"]
+
+
+def load_cells(dryrun_dir: str = "experiments/dryrun",
+               include_variants: bool = False):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        d = json.load(open(f))
+        if d.get("variant") and not include_variants:
+            continue          # hillclimb variants live in §Perf, not here
+        if d.get("skipped") or not d.get("ok"):
+            cells.append(d)
+            continue
+        r = d["roofline"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        d["roofline_frac"] = r["compute_s"] / bound if bound > 0 else 0.0
+        cells.append(d)
+    return cells
+
+
+def to_rows(cells, mesh="single"):
+    rows = []
+    for d in cells:
+        if d.get("mesh") != mesh:
+            continue
+        if d.get("skipped"):
+            rows.append([d["arch"], d["shape"], mesh, "-", "skip",
+                         "-", "-", "-", "-", "-", "-"])
+            continue
+        if not d.get("ok"):
+            rows.append([d["arch"], d["shape"], mesh] + ["FAIL"] * 8)
+            continue
+        r = d["roofline"]
+        m = d["memory"]
+        rows.append([
+            d["arch"], d["shape"], mesh,
+            f"{m['per_device_tpu_estimate']/2**30:.2f}",
+            "y" if m["fits_16GiB"] else "NO",
+            f"{r['compute_s']:.3f}", f"{r['memory_s']:.3f}",
+            f"{r['collective_s']:.3f}", r["dominant"],
+            f"{d['useful_flops_ratio']:.2f}",
+            f"{d['roofline_frac']:.3f}"])
+    return rows
+
+
+def markdown_table(mesh="single", dryrun_dir="experiments/dryrun",
+                   include_variants=False) -> str:
+    cells = load_cells(dryrun_dir, include_variants)
+    rows = to_rows(cells, mesh)
+    out = ["| " + " | ".join(HEADERS) + " |",
+           "|" + "|".join(["---"] * len(HEADERS)) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(x) for x in r) + " |")
+    return "\n".join(out)
+
+
+def summary(dryrun_dir="experiments/dryrun") -> dict:
+    cells = [c for c in load_cells(dryrun_dir) if c.get("ok")
+             and not c.get("skipped")]
+    doms = {}
+    for c in cells:
+        doms[c["roofline"]["dominant"]] = \
+            doms.get(c["roofline"]["dominant"], 0) + 1
+    worst = sorted((c for c in cells if c["mesh"] == "single"),
+                   key=lambda c: c["roofline_frac"])[:5]
+    most_coll = sorted((c for c in cells if c["mesh"] == "single"),
+                       key=lambda c: -c["roofline"]["collective_s"])[:5]
+    return {
+        "n_cells": len(cells),
+        "dominant_counts": doms,
+        "worst_roofline_frac": [(c["arch"], c["shape"],
+                                 round(c["roofline_frac"], 4))
+                                for c in worst],
+        "most_collective_bound": [(c["arch"], c["shape"],
+                                   round(c["roofline"]["collective_s"], 2))
+                                  for c in most_coll],
+    }
+
+
+def main():
+    print(markdown_table("single"))
+    print()
+    print(json.dumps(summary(), indent=1))
+
+
+if __name__ == "__main__":
+    main()

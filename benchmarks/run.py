@@ -1,0 +1,70 @@
+"""Benchmark suite entry: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # fast subset
+    PYTHONPATH=src python -m benchmarks.run --full     # full sweeps
+    PYTHONPATH=src python -m benchmarks.run --only fig12_single_node
+
+Prints ``name,identifier,...,derived`` CSV per row (harness contract) and
+writes full JSON per benchmark to experiments/results/.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from . import paper_figures, roofline
+from .common import emit_csv, save
+
+BENCHES = [
+    ("fig2_partition_vs_colocation", paper_figures.fig2_partition_vs_colocation),
+    ("fig3_priority_first_vs_fcfs", paper_figures.fig3_priority_first_vs_fcfs),
+    ("fig4to8_policy_load_sweeps", paper_figures.fig4to8_policy_load_sweeps),
+    ("fig12_single_node", paper_figures.fig12_single_node),
+    ("fig13_14_multi_node", paper_figures.fig13_14_multi_node),
+    ("fig15_16_priorities", paper_figures.fig15_16_priorities),
+    ("fig17_ablations", paper_figures.fig17_ablations),
+    ("fig18_weight_scaling", paper_figures.fig18_weight_scaling),
+    ("fig19_large_scale", paper_figures.fig19_large_scale),
+    ("fig20_gamma_sensitivity", paper_figures.fig20_gamma_sensitivity),
+    ("fig21_22_timelines", paper_figures.fig21_22_timelines),
+    ("table_estimator_mape", paper_figures.table_estimator_mape),
+    ("table_scheduler_overhead", paper_figures.table_scheduler_overhead),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    fast = not args.full
+
+    t_all = time.time()
+    failures = []
+    for name, fn in BENCHES:
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            rows = fn(fast=fast)
+            save(name, rows)
+            emit_csv(name, rows if isinstance(rows, list) else [rows])
+            print(f"# {name}: {len(rows)} rows in {time.time()-t0:.1f}s")
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+    if args.only in (None, "roofline"):
+        try:
+            s = roofline.summary()
+            print(f"# roofline: {s['n_cells']} dry-run cells, "
+                  f"dominant={s['dominant_counts']}")
+        except Exception as e:  # noqa: BLE001
+            failures.append(("roofline", repr(e)))
+    print(f"# total {time.time()-t_all:.1f}s; failures: {failures or 'none'}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""ProServe scheduling core: TDG gain, latency estimator, SlideBatching,
+block management, GoRouting, and all baseline policies."""
+from .request import Request, SLO, Phase
+from .tdg import tdg_gain, tdg_ratio, ideal_gain, weighted_slo_gain, ta_slo_gain
+from .estimator import BatchLatencyEstimator
+from .blocks import BlockManager, blocks_for
+from .batching import BatchEntry, BatchPlan, EngineConfig, SchedView
+from .slidebatching import SlideBatching
+from .schedulers import make_policy, POLICIES
+from .gorouting import (GoRouting, MinLoad, RoundRobin, RouterConfig,
+                        InstanceState, QueuedStub, ROUTERS)
+
+__all__ = [
+    "Request", "SLO", "Phase", "tdg_gain", "tdg_ratio", "ideal_gain",
+    "weighted_slo_gain", "ta_slo_gain", "BatchLatencyEstimator",
+    "BlockManager", "blocks_for", "BatchEntry", "BatchPlan", "EngineConfig",
+    "SchedView", "SlideBatching", "make_policy", "POLICIES", "GoRouting",
+    "MinLoad", "RoundRobin", "RouterConfig", "InstanceState", "QueuedStub",
+    "ROUTERS",
+]

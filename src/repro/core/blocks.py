@@ -1,0 +1,274 @@
+"""Efficient block management (§4.3).
+
+Pure accounting layer shared by the simulator and the real engine: tracks,
+per request, how many KV blocks live on DEVICE vs HOST, drives the paper's
+three mechanisms, and exposes the copy-budget decision procedure:
+
+* **Eviction policy** — under memory pressure evict blocks of requests near
+  the tail of the sorted queue (they will not run soon), sparing requests
+  close to the starvation threshold.
+* **Asynchronous offloading** — blocks are proactively mirrored device→host
+  every ``n_off`` newly generated blocks (priority-aware: lower priority ⇒
+  smaller threshold ⇒ more eagerly mirrored, because it is more likely to be
+  preempted).  At eviction time, mirrored blocks are freed instantly; blocks
+  not yet mirrored are *dropped* (pending transfer discarded) and their
+  tokens must later be recomputed — exactly the paper's "directly evict all
+  its device blocks and discard the pending transfer".
+* **Pipelined reloading + adaptive copy-budget control** — ``copy_budget``
+  implements the 3-case decision procedure (T_fwd_min vs t_budget vs
+  T_trans_max, with the binary search of case 2(ii)), and
+  ``plan_reload`` implements the per-request full/partial-copy admission
+  rule with the β effective-progress threshold.
+
+Token-resident layout per request is always a CONTIGUOUS PREFIX:
+``[0, dev_tokens)`` on device, ``[dev_tokens, dev_tokens+host_tokens)`` on
+host; anything beyond was dropped and must be recomputed (it is ordinary
+chunked-prefill work — prompt and generated tokens are all known).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .request import Request
+
+
+def blocks_for(tokens: int, block_size: int) -> int:
+    return (tokens + block_size - 1) // block_size
+
+
+@dataclass
+class ReqBlocks:
+    """Per-request block residency (token granularity, prefix-contiguous)."""
+    dev_tokens: int = 0     # contiguous prefix resident on device
+    host_tokens: int = 0    # next contiguous span resident on host
+    mirrored_blocks: int = 0  # device blocks already mirrored to host (async offload)
+    pending_offload: int = 0  # blocks queued on the D2H lane, not yet complete
+
+    def computed_tokens(self) -> int:
+        return self.dev_tokens + self.host_tokens
+
+
+@dataclass
+class TransferLane:
+    """Models one copy direction (D2H or H2D) with finite bandwidth.
+
+    ``busy_until`` advances as copies are enqueued; copies overlap compute
+    (separate stream, App. B) but the lane itself is serial.
+    """
+    t_block: float                    # seconds per block
+    busy_until: float = 0.0
+    total_blocks: int = 0
+
+    def enqueue(self, now: float, n_blocks: int) -> float:
+        """Schedule n blocks; returns completion time."""
+        start = max(now, self.busy_until)
+        self.busy_until = start + n_blocks * self.t_block
+        self.total_blocks += n_blocks
+        return self.busy_until
+
+
+@dataclass
+class CopyPlan:
+    """Per-request reload decision for the coming batch."""
+    restore_blocks: int = 0     # host blocks copied back H2D this round
+    drop_host_tokens: int = 0   # host tokens abandoned (will be recomputed)
+    admitted: bool = True       # False ⇒ skip request this round (Alg.1 l.19)
+
+
+class BlockManager:
+    """Device block pool + host pool + the §4.3 mechanisms."""
+
+    def __init__(self, num_device_blocks: int, block_size: int,
+                 t_block: float, *, async_offload: bool = True,
+                 adaptive_copy: bool = True, recompute_only: bool = False,
+                 n_off_by_priority: Optional[dict[int, int]] = None,
+                 beta: float = 1.5):
+        self.num_device_blocks = num_device_blocks
+        self.block_size = block_size
+        self.t_block = t_block
+        self.async_offload = async_offload
+        self.adaptive_copy = adaptive_copy
+        self.recompute_only = recompute_only  # "Recompute" ablation: drop on evict
+        self.beta = beta
+        # priority -> offload threshold (new blocks between proactive mirrors);
+        # lower priority (larger int) gets a SMALLER threshold.
+        self.n_off_by_priority = n_off_by_priority or {1: 8, 2: 4, 3: 2}
+        self.d2h = TransferLane(t_block)
+        self.h2d = TransferLane(t_block)
+        self.table: dict[int, ReqBlocks] = {}
+        self.used_blocks = 0
+
+    # ------------------------------------------------------------------
+    def state(self, req: Request) -> ReqBlocks:
+        return self.table.setdefault(req.rid, ReqBlocks())
+
+    @property
+    def free_blocks(self) -> int:
+        return self.num_device_blocks - self.used_blocks
+
+    def dev_blocks(self, req: Request) -> int:
+        return blocks_for(self.state(req).dev_tokens, self.block_size)
+
+    def blocks_needed_for_growth(self, req: Request, new_tokens: int) -> int:
+        s = self.state(req)
+        return (blocks_for(s.dev_tokens + new_tokens, self.block_size)
+                - blocks_for(s.dev_tokens, self.block_size))
+
+    # --- growth / release ------------------------------------------------
+    def grow(self, req: Request, new_tokens: int, now: float) -> bool:
+        """Account for new KV written on device; triggers async offload."""
+        need = self.blocks_needed_for_growth(req, new_tokens)
+        if need > self.free_blocks:
+            return False
+        s = self.state(req)
+        s.dev_tokens += new_tokens
+        self.used_blocks += need
+        if self.async_offload and not self.recompute_only:
+            self._maybe_offload(req, now)
+        return True
+
+    def _maybe_offload(self, req: Request, now: float) -> None:
+        """Proactive D2H mirroring every ``n_off`` new FULL blocks (§4.3)."""
+        s = self.state(req)
+        n_off = self.n_off_by_priority.get(
+            req.priority, max(self.n_off_by_priority.values()))
+        full = s.dev_tokens // self.block_size        # only full blocks mirror
+        unmirrored = full - s.mirrored_blocks - s.pending_offload
+        if unmirrored >= n_off:
+            self.d2h.enqueue(now, unmirrored)
+            s.pending_offload += unmirrored
+
+    def complete_offloads(self, now: float) -> None:
+        """Advance the D2H lane: anything enqueued before ``now`` is durable."""
+        for s in self.table.values():
+            if s.pending_offload and self.d2h.busy_until <= now:
+                s.mirrored_blocks += s.pending_offload
+                s.pending_offload = 0
+
+    def release(self, req: Request) -> None:
+        """Request finished: free all its device + host residency."""
+        s = self.table.pop(req.rid, None)
+        if s is not None:
+            self.used_blocks -= blocks_for(s.dev_tokens, self.block_size)
+
+    # --- eviction ----------------------------------------------------------
+    def evict(self, req: Request, now: float) -> int:
+        """Evict ALL device blocks of ``req`` (preemption). Returns freed count.
+
+        Mirrored blocks transition to host residency instantly (they were
+        proactively copied); unmirrored blocks are dropped — with
+        ``recompute_only`` everything is dropped.  Without async offload the
+        un-mirrored blocks must be copied synchronously (D2H lane stall).
+        """
+        s = self.state(req)
+        nblocks = blocks_for(s.dev_tokens, self.block_size)
+        if nblocks == 0 and s.dev_tokens == 0:
+            return 0
+        self.complete_offloads(now)
+        if self.recompute_only:
+            saved_tokens = 0
+        elif self.async_offload:
+            saved_tokens = min(s.mirrored_blocks * self.block_size, s.dev_tokens)
+            s.pending_offload = 0   # discard in-flight transfers
+        else:
+            # synchronous offload: copy everything now (stalls the engine;
+            # callers account d2h.busy_until - now as eviction latency)
+            self.d2h.enqueue(now, nblocks)
+            saved_tokens = s.dev_tokens
+        # Residency must stay a contiguous prefix to be usable.  If only a
+        # prefix of the device span was mirrored, the gap between it and any
+        # pre-existing host suffix makes that suffix unusable — drop it.
+        if saved_tokens >= s.dev_tokens:
+            s.host_tokens = s.dev_tokens + s.host_tokens   # no gap
+        else:
+            s.host_tokens = saved_tokens                    # gap: suffix dropped
+        s.dev_tokens = 0
+        s.mirrored_blocks = 0
+        self.used_blocks -= nblocks
+        return nblocks
+
+    # --- adaptive copy-budget control (§4.3) --------------------------------
+    def copy_budget(self, t_fwd_min: float, t_trans_max: float,
+                    t_budget: float, b_missing: int) -> int:
+        """B_copy by the paper's 3-case procedure."""
+        if not self.adaptive_copy:
+            return b_missing          # "w/o dynamic": always copy everything
+        if self.t_block <= 0:
+            return b_missing
+        if t_fwd_min > t_budget:
+            # batch time is pinned at the latency budget: hide copies under it
+            return int(t_budget // self.t_block)
+        if t_fwd_min >= t_trans_max:
+            return b_missing          # compute dominates: copy all, fully hidden
+        # case 2(ii): binary-search largest B_copy whose transfer time still
+        # fits under the (B_copy-dependent) estimated batch latency.  More
+        # copies ⇒ less recompute ⇒ forward latency falls toward t_fwd_min,
+        # while transfer time rises toward t_trans_max (both monotone).
+        lo, hi = 0, b_missing
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            trans = mid * self.t_block
+            recompute = (b_missing - mid) * self.t_block  # conservative proxy:
+            # recomputing a dropped block costs at least its copy time on TPU
+            # (prefill of s_blk tokens vs 32GB/s PCIe copy) — refined by the
+            # engine which passes estimator-based t_fwd_min.
+            fwd = t_fwd_min + recompute
+            if trans <= fwd:
+                lo = mid
+            else:
+                hi = mid - 1
+        return lo
+
+    def plan_reload(self, req: Request, budget_blocks: int,
+                    chunk_cap_tokens: int, remaining_tokens: int) -> CopyPlan:
+        """Per-request full/partial copy rule ("Put it Together", §4.3).
+
+        If the remaining copy budget covers all of the request's missing
+        (host) blocks, restore them all.  Otherwise consider PARTIAL copy:
+        restore ``budget_blocks`` and abandon the rest, whose tokens will be
+        recomputed as ordinary chunked prefill.  Partial copy is admitted
+        only when it yields enough effective progress this round — either
+        ``l_comp`` reaches the round's computable-token cap, or
+        ``l_comp / dropped_tokens > beta`` (β > 1); otherwise the request is
+        skipped this round and waits for more budget.
+
+        ``chunk_cap_tokens``: max tokens r may compute this round (from the
+        residual latency budget).  ``remaining_tokens``: total compute left
+        for r assuming the dropped span is recomputed (dropped + new work).
+        """
+        s = self.state(req)
+        miss = blocks_for(s.host_tokens, self.block_size)
+        if miss == 0:
+            return CopyPlan()
+        if budget_blocks >= miss:
+            return CopyPlan(restore_blocks=miss)
+        restore = max(0, budget_blocks)
+        dropped_tokens = max(0, s.host_tokens - restore * self.block_size)
+        l_comp = min(chunk_cap_tokens, dropped_tokens + remaining_tokens)
+        reaches_cap = l_comp >= chunk_cap_tokens
+        ratio = l_comp / max(dropped_tokens, 1)
+        if reaches_cap or ratio > self.beta:
+            return CopyPlan(restore_blocks=restore,
+                            drop_host_tokens=dropped_tokens)
+        return CopyPlan(admitted=False)
+
+    def apply_reload(self, req: Request, plan: CopyPlan, now: float) -> float:
+        """Execute a reload plan. Returns H2D completion time (pipelined —
+        overlapped with forward compute; caller enforces the copy-budget
+        guarantee that it fits under batch latency)."""
+        if plan.restore_blocks == 0 and plan.drop_host_tokens == 0:
+            return now
+        s = self.state(req)
+        restore_tokens = min(plan.restore_blocks * self.block_size,
+                             s.host_tokens)
+        need = (blocks_for(s.dev_tokens + restore_tokens, self.block_size)
+                - blocks_for(s.dev_tokens, self.block_size))
+        self.used_blocks += need
+        s.dev_tokens += restore_tokens
+        s.host_tokens -= restore_tokens
+        done = self.h2d.enqueue(now, plan.restore_blocks)
+        if plan.drop_host_tokens:
+            s.host_tokens = max(0, s.host_tokens - plan.drop_host_tokens)
+        return done

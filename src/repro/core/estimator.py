@@ -1,0 +1,104 @@
+"""Batch latency estimator (§4.1, Eq. 4-7).
+
+Per-request core latencies:
+    prefill:  T~_p(r) = a_p * l_q^2 + b_p * l_q * l_kv + c_p * l_q      (5)
+    decode:   T~_d(r) = a_d * l_kv + b_d                                 (6)
+Batch latency:
+    T(B) = sum_r T~(r) + t_c                                            (7)
+
+The quadratic l_q^2 term captures intra-chunk attention, l_q*l_kv the
+attention against cached context (chunked prefill / prefix caching
+compatible), c_p*l_q the linear (MLP/projection) cost.  Decode is
+memory-bound: a_d*l_kv is the KV read, b_d the per-sequence overhead.
+
+Coefficients {a_p,b_p,c_p,a_d,b_d,t_c} are fit by least squares on profiled
+batches (offline, §4.1).  Because the batch time is LINEAR in the summed
+per-request features, we fit one joint regression on batch-level aggregated
+features — exactly the estimator a production deployment trains from engine
+step logs.  The paper reports MAPE ~= 4.5%; we report ours in
+EXPERIMENTS.md (benchmarks/bench_estimator.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, Sequence
+
+import numpy as np
+
+# A forward-pass work item: (l_q, l_kv, is_prefill).
+#   l_q  : tokens processed this pass (chunk size for prefill, 1 for decode)
+#   l_kv : KV context length already cached BEFORE this pass
+WorkItem = tuple[int, int, bool]
+
+
+def _features(items: Iterable[WorkItem]) -> np.ndarray:
+    """Aggregate batch features [sum l_q^2, sum l_q*l_kv, sum l_q, sum l_kv_d, n_d, 1]."""
+    f = np.zeros(6, dtype=np.float64)
+    for l_q, l_kv, is_prefill in items:
+        if is_prefill:
+            f[0] += float(l_q) * l_q
+            f[1] += float(l_q) * l_kv
+            f[2] += float(l_q)
+        else:
+            f[3] += float(l_kv) + l_q  # decode reads ctx incl. current token
+            f[4] += 1.0
+    f[5] = 1.0
+    return f
+
+
+@dataclass
+class BatchLatencyEstimator:
+    a_p: float = 0.0
+    b_p: float = 0.0
+    c_p: float = 0.0
+    a_d: float = 0.0
+    b_d: float = 0.0
+    t_c: float = 0.0
+
+    # --- prediction -------------------------------------------------------
+    def prefill_time(self, l_q: int, l_kv: int = 0) -> float:
+        """T~_p(r), Eq. (5) — excludes the constant batch overhead t_c."""
+        return self.a_p * l_q * l_q + self.b_p * l_q * l_kv + self.c_p * l_q
+
+    def decode_time(self, l_kv: int) -> float:
+        """T~_d(r), Eq. (6)."""
+        return self.a_d * l_kv + self.b_d
+
+    def request_time(self, l_q: int, l_kv: int, is_prefill: bool) -> float:
+        if is_prefill:
+            return self.prefill_time(l_q, l_kv)
+        return self.decode_time(l_kv + l_q)
+
+    def batch_time(self, items: Iterable[WorkItem]) -> float:
+        """T(B), Eq. (7)."""
+        coef = np.array([self.a_p, self.b_p, self.c_p,
+                         self.a_d, self.b_d, self.t_c])
+        return float(_features(items) @ coef)
+
+    # --- fitting ----------------------------------------------------------
+    @classmethod
+    def fit(cls, batches: Sequence[Sequence[WorkItem]],
+            latencies: Sequence[float], ridge: float = 1e-9,
+            ) -> "BatchLatencyEstimator":
+        """Least-squares fit (ridge-regularized, coefficients clipped >= 0)."""
+        X = np.stack([_features(b) for b in batches])
+        y = np.asarray(latencies, dtype=np.float64)
+        # Normal equations with tiny ridge for conditioning; features span
+        # ~10 orders of magnitude so whiten columns first.
+        scale = np.maximum(np.abs(X).max(axis=0), 1e-30)
+        Xs = X / scale
+        A = Xs.T @ Xs + ridge * np.eye(X.shape[1])
+        w = np.linalg.solve(A, Xs.T @ y) / scale
+        w = np.maximum(w, 0.0)  # physical latencies are non-negative
+        return cls(*w.tolist())
+
+    def mape(self, batches: Sequence[Sequence[WorkItem]],
+             latencies: Sequence[float]) -> float:
+        preds = np.array([self.batch_time(b) for b in batches])
+        y = np.asarray(latencies, dtype=np.float64)
+        mask = y > 0
+        return float(np.mean(np.abs(preds[mask] - y[mask]) / y[mask]))
+
+    def as_dict(self) -> dict:
+        return {k: getattr(self, k)
+                for k in ("a_p", "b_p", "c_p", "a_d", "b_d", "t_c")}

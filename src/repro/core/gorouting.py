@@ -1,0 +1,261 @@
+"""GoRouting (§4.4, Alg. 2): gain-oriented, capability-aware global router.
+
+The router keeps lightweight per-instance state (event-driven prefill queue
+``Q_pre`` + decode counter ``n_d``, periodically refreshed free blocks
+``b_f``) with timestamp staleness compensation, and dispatches each request
+to maximize *incremental gain* while reserving capacity on lightly loaded
+instances for future long / high-priority requests (the anti-over-balancing
+dual-threshold rule of Fig. 10).
+
+Baselines: Min-Load and Round-Robin.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from .estimator import BatchLatencyEstimator
+from .request import Request
+
+
+@dataclass
+class QueuedStub:
+    """Router-side view of one in-flight prefill request."""
+    rid: int
+    arrival: float
+    priority: int
+    weight: float
+    prompt_len: int
+    ttft_deadline: float         # absolute
+    exec: float                  # estimated remaining prefill time
+
+
+@dataclass
+class InstanceState:
+    """Router-side state for one engine instance (§4.4 monitoring)."""
+    iid: int
+    pre_queue: dict[int, QueuedStub] = field(default_factory=dict)
+    n_d: int = 0                  # ongoing decode requests
+    b_f: int = 0                  # free KV blocks (periodic report)
+    total_blocks: int = 1
+    prefill_len_total: int = 0    # L_pre for Eq. (11)
+    ts: float = 0.0               # timestamp of last queue mutation
+    speed: float = 1.0            # EWMA throughput factor (straggler aware)
+    alive: bool = True
+
+    # --- event-driven updates -----------------------------------------
+    def on_dispatch(self, stub: QueuedStub, now: float) -> None:
+        if not self.pre_queue:
+            self.ts = now
+        self.pre_queue[stub.rid] = stub
+        self.prefill_len_total += stub.prompt_len
+
+    def on_prefill_done(self, rid: int, now: float) -> None:
+        stub = self.pre_queue.pop(rid, None)
+        if stub is not None:
+            self.prefill_len_total -= stub.prompt_len
+            self.n_d += 1
+        self.ts = now
+
+    def on_finished(self, rid: int) -> None:
+        self.n_d = max(0, self.n_d - 1)
+
+    def queue_exec_total(self, now: float) -> float:
+        """Σ exec over Q_pre with staleness compensation: subtract elapsed
+        time since the last mutation (prefill progress the events missed)."""
+        tot = sum(s.exec for s in self.pre_queue.values())
+        if self.pre_queue:
+            tot = max(0.0, tot - max(0.0, now - self.ts))
+        return tot / max(self.speed, 1e-6)
+
+
+@dataclass
+class RouterConfig:
+    alpha: float = 0.7            # candidate-set slack  C={Δ_p >= α·Δ_max}
+    mu: float = 0.25              # light-load threshold (× TTFT_SLO)
+    lam: float = 0.8              # heavy-load threshold (× TTFT_SLO)
+    pd_mode: str = "coloc"        # "coloc" | "disagg"
+    tpot_guard: float = 0.8       # coloc: exclude instance if t̂_d nears TPOT
+    hedge_high_priority: bool = False   # straggler mitigation (beyond-paper)
+
+
+class GoRouting:
+    name = "gorouting"
+
+    def __init__(self, est: BatchLatencyEstimator, cfg: RouterConfig,
+                 sort_key: Optional[Callable] = None):
+        self.est = est
+        self.cfg = cfg
+        # mirror of the local scheduler's queue ordering; default: EDF-ish
+        self.sort_key = sort_key or (lambda s, now: s.ttft_deadline)
+
+    # ------------------------------------------------------------------
+    def _decode_overhead(self, inst: InstanceState, block_size: int) -> float:
+        """t̂_d(n_d), Eq. (10)–(11): estimated decode time riding along each
+        co-located batch, from the block-occupancy estimate of decode KV."""
+        if self.cfg.pd_mode != "coloc" or inst.n_d == 0:
+            return 0.0
+        used = inst.total_blocks - inst.b_f
+        l_kv_d = max(0, used - inst.prefill_len_total // block_size) * block_size
+        return self.est.a_d * l_kv_d + self.est.b_d * inst.n_d
+
+    def _exec_schedule(self, inst: InstanceState, now: float,
+                       extra: Optional[QueuedStub], block_size: int,
+                       ) -> tuple[float, dict[int, float]]:
+        """EstimateExec for every queued request on ``inst`` (+``extra``).
+
+        Returns (total drain time, {rid: completion offset}).  Uses the
+        conservative φ-style scaling with t_budget = min TPOT_SLO (App. A)
+        plus the coloc decode term per batch round.
+        """
+        stubs = list(inst.pre_queue.values())
+        if extra is not None:
+            stubs = stubs + [extra]
+        stubs.sort(key=lambda s: self.sort_key(s, now))
+        t_c = self.est.t_c
+        dec = self._decode_overhead(inst, block_size)
+        # φ-scaling: each unit of prefill work inflates by budget/(budget-t_c)
+        # — approximated by adding (t_c + decode term) per round where a
+        # round carries ~t_budget of prefill work.
+        acc = 0.0
+        stale = max(0.0, now - inst.ts) if inst.pre_queue else 0.0
+        out: dict[int, float] = {}
+        for s in stubs:
+            acc += s.exec / max(inst.speed, 1e-6) + t_c + dec
+            out[s.rid] = acc
+        total = max(0.0, acc - stale)
+        for k in out:
+            out[k] = max(0.0, out[k] - stale)
+        return total, out
+
+    def _gain(self, inst: InstanceState, now: float,
+              extra: Optional[QueuedStub], block_size: int) -> float:
+        """EstimateGain (App. A): Σ w_r(1)·1[exec ≤ remaining TTFT budget]."""
+        _, completion = self._exec_schedule(inst, now, extra, block_size)
+        stubs = {s.rid: s for s in inst.pre_queue.values()}
+        if extra is not None:
+            stubs[extra.rid] = extra
+        g = 0.0
+        for rid, done in completion.items():
+            s = stubs[rid]
+            if now + done <= s.ttft_deadline:
+                g += s.weight
+        return g
+
+    # ------------------------------------------------------------------
+    def select(self, req: Request, prefill_pool: list[InstanceState],
+               decode_pool: Optional[list[InstanceState]], now: float,
+               block_size: int = 16, exec_est: Optional[float] = None,
+               ) -> tuple[Optional[int], Optional[int]]:
+        """Alg. 2: returns (prefill_instance, decode_instance) ids."""
+        live = [p for p in prefill_pool if p.alive]
+        if not live:
+            return None, None
+        if exec_est is None:
+            exec_est = self.est.prefill_time(req.prompt_len)
+        stub = QueuedStub(req.rid, now, req.priority, req.weight,
+                          req.prompt_len, req.arrival + req.slo.ttft,
+                          exec_est)
+
+        # lines 2-6: incremental gain per instance
+        deltas: dict[int, float] = {}
+        for p in live:
+            pre = self._gain(p, now, None, block_size)
+            post = self._gain(p, now, stub, block_size)
+            deltas[p.iid] = post - pre
+        d_max = max(deltas.values())
+
+        # coloc decode-latency guard: drop instances whose decode term would
+        # blow the TPOT SLO once the queued prefills also enter decode.
+        def tpot_ok(p: InstanceState) -> bool:
+            if self.cfg.pd_mode != "coloc":
+                return True
+            t_d = self.est.a_d * 0 + self.est.b_d * (p.n_d + len(p.pre_queue))
+            return t_d + self._decode_overhead(p, block_size) \
+                <= self.cfg.tpot_guard * req.slo.tpot
+
+        # line 7: candidate set
+        cand = [p for p in live
+                if deltas[p.iid] >= self.cfg.alpha * d_max and tpot_ok(p)]
+        if not cand:
+            cand = live
+
+        exec_wo = {p.iid: self._exec_schedule(p, now, None, block_size)[0]
+                   for p in cand}
+        exec_w = {p.iid: self._exec_schedule(p, now, stub, block_size)[0]
+                  for p in cand}
+
+        if d_max > 0:
+            ttft = req.slo.ttft
+            light = [p for p in cand if exec_wo[p.iid] < self.cfg.mu * ttft]
+            heavy = [p for p in cand if exec_w[p.iid] > self.cfg.lam * ttft]
+            heavy_ids = {p.iid for p in heavy}
+            non_heavy = [p for p in cand if p.iid not in heavy_ids]
+            if light:                                  # most idle light one
+                pick = min(light, key=lambda p: exec_wo[p.iid])
+            elif non_heavy:                            # HEAVIEST non-heavy:
+                pick = max(non_heavy,                  # reserve light capacity
+                           key=lambda p: exec_wo[p.iid])
+            else:                                      # all heavy: balance
+                pick = min(cand, key=lambda p: exec_wo[p.iid])
+        else:
+            # line 18 fallback: no instance can meet the SLO — min load
+            pick = min(live, key=lambda p: self._exec_schedule(
+                p, now, None, block_size)[0])
+
+        d_pick = None
+        if decode_pool is not None:
+            d_live = [d for d in decode_pool if d.alive]
+            if d_live:
+                d_pick = max(d_live, key=lambda d: d.b_f).iid   # line 19
+        return pick.iid, d_pick
+
+
+# --------------------------------------------------------------------------
+# global-scheduler baselines
+# --------------------------------------------------------------------------
+
+class MinLoad:
+    """Dispatch to the instance with the smallest estimated queue drain."""
+    name = "min_load"
+
+    def __init__(self, est: BatchLatencyEstimator):
+        self.est = est
+
+    def select(self, req, prefill_pool, decode_pool, now,
+               block_size=16, exec_est=None):
+        live = [p for p in prefill_pool if p.alive]
+        if not live:
+            return None, None
+        pick = min(live, key=lambda p: p.queue_exec_total(now))
+        d_pick = None
+        if decode_pool is not None:
+            d_live = [d for d in decode_pool if d.alive]
+            if d_live:
+                d_pick = max(d_live, key=lambda d: d.b_f).iid
+        return pick.iid, d_pick
+
+
+class RoundRobin:
+    name = "round_robin"
+
+    def __init__(self, est=None):
+        self._it = itertools.count()
+
+    def select(self, req, prefill_pool, decode_pool, now,
+               block_size=16, exec_est=None):
+        live = [p for p in prefill_pool if p.alive]
+        if not live:
+            return None, None
+        pick = live[next(self._it) % len(live)]
+        d_pick = None
+        if decode_pool is not None:
+            d_live = [d for d in decode_pool if d.alive]
+            if d_live:
+                d_pick = d_live[next(self._it) % len(d_live)].iid
+        return pick.iid, d_pick
+
+
+ROUTERS = {"gorouting": GoRouting, "min_load": MinLoad,
+           "round_robin": RoundRobin}

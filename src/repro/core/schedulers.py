@@ -1,0 +1,316 @@
+"""Baseline batch schedulers (§5.1) implemented against the same SchedView /
+BatchPlan interface as SlideBatching so every policy runs inside the
+identical engine — mirroring the paper's "all schedulers implemented within
+xLLM" methodology.
+
+* vLLM-FCFS        — prefill-prioritized FCFS, whole-prompt admission,
+                     recompute preemption (vLLM default).
+* Sarathi-FCFS     — chunked prefill, decode-prioritized, FCFS among
+                     waiting prefills, profiled token budget.
+* Sarathi-Priority — Sarathi with waiting queue ordered by (priority, arrival).
+* FairBatching     — enhanced EDF: decodes near deadline > prefills (EDF) >
+                     remaining decodes.
+* Weighted VTC     — CFS-style weighted virtual token counters per client.
+* EDF / SJF / Priority-First — classic orderings (§3 motivation studies).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+from .batching import (BatchEntry, BatchPlan, SchedView, compute_remaining,
+                       exec_estimate, grow_with_eviction, needed_context)
+from .request import Phase, Request
+
+
+# --------------------------------------------------------------------------
+# shared mechanics
+# --------------------------------------------------------------------------
+
+def _decodes(view: SchedView) -> list[Request]:
+    out = []
+    for r in view.queue:
+        if r.phase == Phase.DECODE:
+            todo, _ = compute_remaining(r, view.bm)
+            if todo == 0:
+                out.append(r)
+    return out
+
+
+def _prefillable(view: SchedView) -> list[Request]:
+    out = []
+    for r in view.queue:
+        if r.phase == Phase.FINISHED:
+            continue
+        todo, _ = compute_remaining(r, view.bm)
+        if todo > 0:
+            out.append(r)
+    return out
+
+
+def _restore_all_host(view: SchedView, r: Request,
+                      plan: BatchPlan, protect: set[int]) -> bool:
+    """Baselines restore any host-resident KV in full before running (they
+    have no adaptive copy budget; w/o-dynamic behaviour)."""
+    s = view.bm.state(r)
+    if s.host_tokens == 0:
+        return True
+    cplan = view.bm.plan_reload(r, 1 << 30, 1 << 30, 1 << 30)
+    need = cplan.restore_blocks
+    if need > view.bm.free_blocks:
+        from .batching import evict_for_space
+        plan.evictions.extend(evict_for_space(view, need, protect | {r.rid}))
+    if need > view.bm.free_blocks:
+        return False
+    view.bm.apply_reload(r, cplan, view.now)
+    plan.copy_blocks += need
+    return True
+
+
+def _admit_decode(view: SchedView, r: Request, plan: BatchPlan,
+                  protect: set[int]) -> bool:
+    if not _restore_all_host(view, r, plan, protect):
+        return False
+    if not grow_with_eviction(view, r, 1, protect | {r.rid}, plan.evictions):
+        return False
+    plan.entries.append(BatchEntry(r, 1, needed_context(r), False))
+    protect.add(r.rid)
+    return True
+
+
+def _admit_prefill_chunk(view: SchedView, r: Request, max_tokens: int,
+                         plan: BatchPlan, protect: set[int]) -> int:
+    """Admit up to ``max_tokens`` of (re)compute for r; returns tokens taken."""
+    if not _restore_all_host(view, r, plan, protect):
+        return 0
+    todo, _ = compute_remaining(r, view.bm)
+    chunk = min(todo, max_tokens)
+    if chunk <= 0:
+        return 0
+    l_kv = view.bm.state(r).dev_tokens
+    if not grow_with_eviction(view, r, chunk, protect | {r.rid},
+                              plan.evictions):
+        return 0
+    plan.entries.append(BatchEntry(r, chunk, l_kv, True))
+    protect.add(r.rid)
+    return chunk
+
+
+def _finalize(view: SchedView, plan: BatchPlan) -> BatchPlan:
+    plan.est_time = view.est.batch_time(plan.work_items())
+    return plan
+
+
+# --------------------------------------------------------------------------
+# vLLM default: prefill-prioritized FCFS, whole prompts, no chunking
+# --------------------------------------------------------------------------
+
+class VllmFCFS:
+    name = "vllm_fcfs"
+
+    def form_batch(self, view: SchedView) -> BatchPlan:
+        plan = BatchPlan()
+        protect: set[int] = set()
+        cfg = view.cfg
+        waiting = sorted(_prefillable(view), key=lambda r: r.arrival)
+        budget = cfg.token_budget
+        # admit WHOLE prompts FCFS while they fit the token budget; a prompt
+        # longer than the whole budget runs ALONE (vLLM requires
+        # max_num_batched_tokens >= max_model_len — emulated by lifting the
+        # cap for a single head-of-line sequence instead of stalling it)
+        for r in waiting:
+            todo, _ = compute_remaining(r, view.bm)
+            if len(plan.entries) >= cfg.max_seqs:
+                break
+            if todo > budget:
+                if not plan.entries:
+                    _admit_prefill_chunk(view, r, todo, plan, protect)
+                break
+            taken = _admit_prefill_chunk(view, r, todo, plan, protect)
+            if taken == 0:
+                break
+            budget -= taken
+        if plan.entries:          # vLLM v0: prefill batches run alone
+            return _finalize(view, plan)
+        for r in sorted(_decodes(view), key=lambda r: r.arrival):
+            if len(plan.entries) >= cfg.max_seqs:
+                break
+            _admit_decode(view, r, plan, protect)
+        return _finalize(view, plan)
+
+
+# --------------------------------------------------------------------------
+# Sarathi family: decode-prioritized + chunked prefill under token budget
+# --------------------------------------------------------------------------
+
+class _SarathiBase:
+    def _waiting_order(self, view: SchedView) -> Callable[[Request], tuple]:
+        raise NotImplementedError
+
+    def form_batch(self, view: SchedView) -> BatchPlan:
+        plan = BatchPlan()
+        protect: set[int] = set()
+        cfg = view.cfg
+        budget = cfg.token_budget
+        for r in sorted(_decodes(view), key=lambda r: r.arrival):
+            if len(plan.entries) >= cfg.max_seqs or budget <= 0:
+                break
+            if _admit_decode(view, r, plan, protect):
+                budget -= 1
+        key = self._waiting_order(view)
+        for r in sorted(_prefillable(view), key=key):
+            if budget <= 0 or len(plan.entries) >= cfg.max_seqs:
+                break
+            chunk = min(budget, cfg.chunk_size)
+            budget -= _admit_prefill_chunk(view, r, chunk, plan, protect)
+        return _finalize(view, plan)
+
+
+class SarathiFCFS(_SarathiBase):
+    name = "sarathi_fcfs"
+
+    def _waiting_order(self, view):
+        return lambda r: (r.arrival,)
+
+
+class SarathiPriority(_SarathiBase):
+    name = "sarathi_priority"
+
+    def _waiting_order(self, view):
+        return lambda r: (r.priority, r.arrival)   # priority 1 first, then FCFS
+
+
+class EDF(_SarathiBase):
+    name = "edf"
+
+    def _waiting_order(self, view):
+        now = view.now
+        return lambda r: (r.remain(now),)
+
+
+class SJF(_SarathiBase):
+    name = "sjf"
+
+    def _waiting_order(self, view):
+        return lambda r: (exec_estimate(r, view),)
+
+
+class PriorityFirst(_SarathiBase):
+    """Strict priority-first (§3.1 motivation): priority dominates everything,
+    including the decode/prefill split — emulated by ordering waiting work by
+    priority and letting high-priority prefills consume the whole budget."""
+    name = "priority_first"
+
+    def _waiting_order(self, view):
+        return lambda r: (r.priority, r.remain(view.now))
+
+
+# --------------------------------------------------------------------------
+# FairBatching: decodes near deadline > EDF prefills > remaining decodes
+# --------------------------------------------------------------------------
+
+class FairBatching:
+    name = "fair_batching"
+
+    def __init__(self, urgency_factor: float = 2.0):
+        self.urgency_factor = urgency_factor
+
+    def form_batch(self, view: SchedView) -> BatchPlan:
+        plan = BatchPlan()
+        protect: set[int] = set()
+        cfg, now = view.cfg, view.now
+        budget = cfg.token_budget
+        decodes = _decodes(view)
+        urgent, rest = [], []
+        for r in decodes:
+            slack = r.remain(now)
+            if slack < self.urgency_factor * r.slo.tpot:
+                urgent.append(r)
+            else:
+                rest.append(r)
+        for r in sorted(urgent, key=lambda r: r.remain(now)):
+            if budget <= 0 or len(plan.entries) >= cfg.max_seqs:
+                break
+            if _admit_decode(view, r, plan, protect):
+                budget -= 1
+        for r in sorted(_prefillable(view), key=lambda r: r.remain(now)):
+            if budget <= 0 or len(plan.entries) >= cfg.max_seqs:
+                break
+            chunk = min(budget, cfg.chunk_size)
+            budget -= _admit_prefill_chunk(view, r, chunk, plan, protect)
+        for r in sorted(rest, key=lambda r: r.remain(now)):
+            if budget <= 0 or len(plan.entries) >= cfg.max_seqs:
+                break
+            if _admit_decode(view, r, plan, protect):
+                budget -= 1
+        return _finalize(view, plan)
+
+
+# --------------------------------------------------------------------------
+# Weighted VTC (OSDI'24 fairness) — CFS-like weighted virtual token counters
+# --------------------------------------------------------------------------
+
+class WeightedVTC:
+    """Clients accrue virtual time = served_tokens / weight; each round the
+    scheduler serves the client with the LOWEST counter first, so processed
+    token ratios track priority weights.  No SLO awareness (the paper's
+    point: fairness alone cannot guarantee latency)."""
+    name = "weighted_vtc"
+
+    def __init__(self):
+        self.counters: dict[int, float] = {}
+
+    def _vt(self, client: int) -> float:
+        return self.counters.get(client, 0.0)
+
+    def _charge(self, r: Request, tokens: int) -> None:
+        self.counters[r.client] = self._vt(r.client) + tokens / max(r.weight, 1e-9)
+
+    def form_batch(self, view: SchedView) -> BatchPlan:
+        plan = BatchPlan()
+        protect: set[int] = set()
+        cfg = view.cfg
+        budget = cfg.token_budget
+        # lift counters of newly active clients to min active counter (VTC)
+        active = {r.client for r in view.queue if r.phase != Phase.FINISHED}
+        if active:
+            base = min(self._vt(c) for c in active)
+            for c in active:
+                if c not in self.counters:
+                    self.counters[c] = base
+        # decodes keep running (stall-free), charged to their clients
+        for r in sorted(_decodes(view), key=lambda r: self._vt(r.client)):
+            if budget <= 0 or len(plan.entries) >= cfg.max_seqs:
+                break
+            if _admit_decode(view, r, plan, protect):
+                self._charge(r, 1)
+                budget -= 1
+        for r in sorted(_prefillable(view),
+                        key=lambda r: (self._vt(r.client), r.arrival)):
+            if budget <= 0 or len(plan.entries) >= cfg.max_seqs:
+                break
+            chunk = min(budget, cfg.chunk_size)
+            taken = _admit_prefill_chunk(view, r, chunk, plan, protect)
+            if taken:
+                self._charge(r, taken)
+                budget -= taken
+        return _finalize(view, plan)
+
+
+POLICIES: dict[str, Callable[[], object]] = {
+    "vllm_fcfs": VllmFCFS,
+    "sarathi_fcfs": SarathiFCFS,
+    "sarathi_priority": SarathiPriority,
+    "fair_batching": FairBatching,
+    "weighted_vtc": WeightedVTC,
+    "edf": EDF,
+    "sjf": SJF,
+    "priority_first": PriorityFirst,
+}
+
+
+def make_policy(name: str, **kw):
+    if name == "slidebatching":
+        from .slidebatching import SlideBatching
+        return SlideBatching(**kw)
+    return POLICIES[name](**kw)

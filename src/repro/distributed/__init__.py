@@ -1,0 +1,5 @@
+from .sharding import (ShardingPolicy, param_specs, make_shard_fn,
+                       cache_specs, named)
+
+__all__ = ["ShardingPolicy", "param_specs", "make_shard_fn", "cache_specs",
+           "named"]

@@ -1,0 +1,244 @@
+"""Sharding rules: map every parameter / activation / cache tensor onto the
+production mesh ``("pod", "data", "model")`` (DESIGN.md §5).
+
+Strategy per mode
+-----------------
+* ``train``  — FSDP×TP: weight matrices sharded over BOTH the data axis
+  (ZeRO-style) and the model axis (Megatron TP); batch over pod×data;
+  optional sequence-parallel residual stream (seq over "model") which is
+  what bounds per-layer activation checkpoints for the d_model≥7k archs.
+* ``serve``  — TP only: weights sharded over "model", replicated across
+  pod/data; request batch over pod×data; decode KV caches sharded over
+  batch AND sequence (seq over "model") so any kv_heads count works — the
+  attention reductions over the sharded seq axis lower to small
+  all-reduces (flash-decode-style combine) instead of KV all-gathers.
+
+Divisibility guard: a dimension is sharded only when divisible by the axis
+size (e.g. whisper's vocab 51865 and mamba2's 50280 are NOT divisible by 16
+⇒ vocab replicated for those archs; qwen2-moe's 60 experts are not
+divisible ⇒ experts stay unsharded and the EXPERT-INTERNAL ffn dim is TP
+sharded instead — "TP-within-expert").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.model import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    mesh: Mesh
+    mode: str = "train"            # train | serve
+    sp: bool = True                # sequence-parallel residual (train)
+    fsdp: bool = True              # shard params over the data axis (train)
+    seq_sharded_kv: bool = True    # serve: shard KV seq over "model"
+
+    @property
+    def dp(self) -> tuple:
+        axes = tuple(n for n in self.mesh.axis_names if n in ("pod", "data"))
+        return axes
+
+    @property
+    def tp(self) -> str:
+        return "model"
+
+    def axis_size(self, name) -> int:
+        if isinstance(name, tuple):
+            out = 1
+            for n in name:
+                out *= self.mesh.shape[n]
+            return out
+        return self.mesh.shape[name]
+
+    def dp_if(self, dim: int):
+        """dp axes when the dim divides the dp extent, else None (small
+        batches — e.g. long_500k's batch of 1 — replicate)."""
+        return self.dp if dim % self.axis_size(self.dp) == 0 else None
+
+
+def _div(dim: int, policy: ShardingPolicy, axis) -> bool:
+    return dim % policy.axis_size(axis) == 0
+
+
+def _matrix_spec(policy: ShardingPolicy, rows: int, cols: int,
+                 col_is_tp: bool) -> P:
+    """Spec for a (rows, cols) weight: TP on one dim, FSDP on the other."""
+    tp, dpa = policy.tp, "data"
+    tp_dim_ok = _div(cols if col_is_tp else rows, policy, tp)
+    if policy.mode == "serve" or not policy.fsdp:
+        fs = None
+    else:
+        fs_dim = rows if col_is_tp else cols
+        fs = dpa if _div(fs_dim, policy, dpa) else None
+    if col_is_tp:
+        return P(fs, tp) if tp_dim_ok else P(fs, None)
+    return P(tp, fs) if tp_dim_ok else P(None, fs)
+
+
+def param_specs(cfg: ArchConfig, policy: ShardingPolicy, params: dict):
+    """PartitionSpec pytree mirroring ``init_params`` output.
+
+    Layer params carry a LEADING layer axis (scan stacking) — specs gain a
+    ``None`` in front via the path check.
+    """
+    d = cfg.d_model
+
+    def spec_for(path: tuple, leaf) -> P:
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        stacked = "layers" in names[0] if names else False
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        s = _leaf_spec(names, shape)
+        return P(*((None,) + tuple(s))) if stacked else s
+
+    def _leaf_spec(names, shape) -> P:
+        n = names[-1]
+        parent = names[-2] if len(names) > 1 else ""
+        # --- embeddings / unembedding: (V, d) ---
+        if n in ("embed", "lm_head"):
+            v_ok = _div(shape[0], policy, policy.tp)
+            if policy.mode == "serve" or not policy.fsdp:
+                return P(policy.tp if v_ok else None, None)
+            d_ok = _div(shape[1], policy, "data")
+            return P(policy.tp if v_ok else None, "data" if d_ok else None)
+        # --- norms / scalars / small vectors: replicate ---
+        if n in ("scale", "bias", "q_norm", "k_norm", "A_log", "D",
+                 "dt_bias", "norm_scale", "conv_b"):
+            return P(*([None] * len(shape)))
+        # --- attention projections ---
+        if n in ("wq", "wk", "wv"):
+            return _matrix_spec(policy, shape[0], shape[1], col_is_tp=True)
+        if n == "wo":
+            return _matrix_spec(policy, shape[0], shape[1], col_is_tp=False)
+        if n in ("bq", "bk", "bv"):
+            return P(policy.tp if _div(shape[0], policy, policy.tp) else None)
+        # --- dense MLP ---
+        if n in ("w_gate", "w_up") and parent != "moe" and len(shape) == 2:
+            return _matrix_spec(policy, shape[0], shape[1], col_is_tp=True)
+        if n == "w_down" and len(shape) == 2:
+            return _matrix_spec(policy, shape[0], shape[1], col_is_tp=False)
+        if n in ("b_up",):
+            return P(policy.tp if _div(shape[0], policy, policy.tp) else None)
+        if n in ("b_down",):
+            return P(None)
+        # --- MoE experts: (E, d, f) / (E, f, d) ---
+        if len(shape) == 3:
+            E = shape[0]
+            if _div(E, policy, policy.tp):          # expert parallelism
+                return P(policy.tp, None, None)
+            # TP-within-expert fallback (e.g. qwen2-moe's 60 experts)
+            if n in ("w_gate", "w_up") and _div(shape[2], policy, policy.tp):
+                return P(None, None, policy.tp)
+            if n == "w_down" and _div(shape[1], policy, policy.tp):
+                return P(None, policy.tp, None)
+            return P(None, None, None)
+        if n == "router":
+            return P(None, None)
+        # --- SSM ---
+        if n == "w_in":
+            fs = "data" if (policy.mode == "train" and policy.fsdp
+                            and _div(shape[0], policy, "data")) else None
+            return P(fs, None)
+        if n == "w_out":
+            fs = "data" if (policy.mode == "train" and policy.fsdp
+                            and _div(shape[1], policy, "data")) else None
+            return P(None, fs)
+        if n == "conv_w":
+            return P(None, None)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+# --------------------------------------------------------------------------
+# activation sharding callback
+# --------------------------------------------------------------------------
+
+def make_shard_fn(cfg: ArchConfig, policy: ShardingPolicy):
+    """Returns shard_fn(x, kind) applying with_sharding_constraint."""
+    dp = policy.dp
+    tp = policy.tp
+    mesh = policy.mesh
+
+    def spec_of(kind: str, x) -> Optional[P]:
+        if kind == "act":                      # (B, S, d) residual stream
+            # sequence-parallel residual in BOTH modes: bounds per-layer
+            # activation footprint (train remat carries, 32k prefill temps)
+            b = policy.dp_if(x.shape[0])
+            if policy.sp and x.shape[1] % policy.axis_size(tp) == 0:
+                return P(b, tp, None)
+            return P(b, None, None)
+        if kind == "logits":                   # (B, S, V)
+            v_ok = x.shape[-1] % policy.axis_size(tp) == 0
+            return P(policy.dp_if(x.shape[0]), None, tp if v_ok else None)
+        if kind == "act_decode":               # (B, 1, d)
+            return P(policy.dp_if(x.shape[0]), None, None)
+        if kind == "logits_decode":            # (B, V)
+            v_ok = x.shape[-1] % policy.axis_size(tp) == 0
+            return P(policy.dp_if(x.shape[0]), tp if v_ok else None)
+        if kind in ("moe_dispatch", "moe_combine"):   # (B, E, C, d)
+            e_ok = x.shape[1] % policy.axis_size(tp) == 0
+            # EP when E divides the axis — this constraint IS the all-to-all
+            return P(policy.dp_if(x.shape[0]), tp if e_ok else None,
+                     None, None)
+        if kind == "kv_stack":                 # per-layer (B, S, Hkv, hd)
+            s_ok = (policy.seq_sharded_kv
+                    and x.shape[1] % policy.axis_size(tp) == 0)
+            return P(policy.dp_if(x.shape[0]), tp if s_ok else None,
+                     None, None)
+        if kind == "attn_scores":          # (B, Hkv, G, Sq, Skv)
+            q_ok = x.shape[3] % policy.axis_size(tp) == 0
+            return P(policy.dp_if(x.shape[0]), None, None,
+                     tp if q_ok else None, None)
+        if kind == "dec_scores":               # (B, Hkv, G, Skv)
+            s_ok = x.shape[-1] % policy.axis_size(tp) == 0
+            return P(policy.dp_if(x.shape[0]), None, None,
+                     tp if s_ok else None)
+        return None
+
+    def shard_fn(x, kind: str):
+        s = spec_of(kind, x)
+        if s is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s))
+
+    return shard_fn
+
+
+def cache_specs(cfg: ArchConfig, policy: ShardingPolicy, cache: dict):
+    """Specs for the serving cache pytree.
+
+    KV: (L, B, S, Hkv, hd) — batch over pod×data; seq over "model" when
+    enabled (flash-decode combine; works for ANY kv_heads count including
+    chatglm3's kv=2).  SSM state: (L, B, H, P, N) — batch over pod×data,
+    heads over "model" when divisible.
+    """
+    tp = policy.tp
+    specs = {}
+    for k, v in cache.items():
+        if k == "len":
+            specs[k] = P(policy.dp_if(v.shape[0]))
+        elif k in ("k", "v", "cross_k", "cross_v"):
+            b = policy.dp_if(v.shape[1])
+            seq_ok = (policy.seq_sharded_kv
+                      and v.shape[2] % policy.axis_size(tp) == 0)
+            specs[k] = P(None, b, tp if seq_ok else None, None, None)
+        elif k == "ssm":
+            b = policy.dp_if(v.shape[1])
+            h_ok = v.shape[2] % policy.axis_size(tp) == 0
+            specs[k] = P(None, b, tp if h_ok else None, None, None)
+        elif k == "conv":
+            specs[k] = P(None, policy.dp_if(v.shape[1]), None, None)
+        else:
+            specs[k] = P(*([None] * v.ndim))
+    return specs
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))

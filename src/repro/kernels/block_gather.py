@@ -1,0 +1,45 @@
+"""KV-block gather: compact scattered pool pages into a contiguous staging
+buffer.
+
+The §4.3 block manager offloads/reloads pages between device and host; the
+host DMA engine wants CONTIGUOUS device buffers, while the paged pool
+scatters a request's pages arbitrarily.  This kernel gathers the pages
+named by ``indices`` into a staging buffer in one pass (index-driven
+BlockSpec = one DMA per page, no compute) — the device half of the
+asynchronous offloading path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, pool_ref, out_ref):
+    del idx_ref
+    out_ref[...] = pool_ref[...]
+
+
+def block_gather(pool, indices, *, interpret: bool = False):
+    """pool: (P, page, Hkv, hd); indices: (n,) int32 -> (n, page, Hkv, hd)."""
+    n = indices.shape[0]
+    _, page, hkv, hd = pool.shape
+
+    def in_map(i, idx):
+        return (idx[i], 0, 0, 0)
+
+    def out_map(i, idx):
+        return (i, 0, 0, 0)
+
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n,),
+            in_specs=[pl.BlockSpec((1, page, hkv, hd), in_map)],
+            out_specs=pl.BlockSpec((1, page, hkv, hd), out_map),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, page, hkv, hd), pool.dtype),
+        interpret=interpret,
+    )(indices, pool)

@@ -1,0 +1,42 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On the TPU target the kernels compile natively; on this CPU container they
+run in ``interpret=True`` mode (the kernel body executes as traced jnp ops)
+which is how the tests validate them against the ref.py oracles.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .block_gather import block_gather as _block_gather
+from .chunked_prefill import chunked_prefill_attention as _chunked_prefill
+from .paged_attention import paged_decode_attention as _paged_decode
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths,
+                           interpret: bool | None = None):
+    it = _interpret_default() if interpret is None else interpret
+    return _paged_decode(q, k_pages, v_pages, block_tables, lengths,
+                         interpret=it)
+
+
+@partial(jax.jit, static_argnames=("kv_block", "interpret"))
+def chunked_prefill_attention(q, k_cache, v_cache, cache_lens,
+                              kv_block: int = 512,
+                              interpret: bool | None = None):
+    it = _interpret_default() if interpret is None else interpret
+    return _chunked_prefill(q, k_cache, v_cache, cache_lens,
+                            kv_block=kv_block, interpret=it)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def block_gather(pool, indices, interpret: bool | None = None):
+    it = _interpret_default() if interpret is None else interpret
+    return _block_gather(pool, indices, interpret=it)

@@ -1,0 +1,130 @@
+"""Paged flash-decode attention — the serving engine's decode hot path.
+
+ProServe's block manager stores KV in fixed-size pages with per-request
+block tables (§4.3); this kernel runs one decode step for a batch of
+requests directly against the paged pool:
+
+  * grid = (batch, kv_head, page_step) — the page dimension iterates
+    sequentially on-core, maintaining an online softmax in VMEM scratch
+    (flash-decode), so nothing larger than one (page, head_dim) tile plus
+    the (G, head_dim) accumulator ever sits in VMEM;
+  * page indices are SCALAR-PREFETCHED (PrefetchScalarGridSpec): the block
+    table drives the K/V BlockSpec index_map, so each grid step DMAs
+    exactly the page it needs — the TPU analogue of vLLM's gather, with no
+    materialized (B, S, ...) contiguous KV;
+  * GQA: the G = H/Hkv query heads of a kv group are processed together as
+    the row dimension of the (G, page) score tile.
+
+TPU mapping notes (DESIGN.md §2): page_size should be a multiple of 128
+(lane dim) and head_dim 128 for MXU alignment; G < 8 underfills the MXU
+sublane dim — acceptable for decode, which is DMA-bound anyway.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    # --- scalar prefetch ---
+    block_tables_ref,    # (B, maxp) int32
+    lengths_ref,         # (B,) int32
+    # --- blocked operands ---
+    q_ref,               # (1, 1, G, hd)
+    k_ref,               # (1, page, 1, hd)
+    v_ref,               # (1, page, 1, hd)
+    # --- blocked output ---
+    o_ref,               # (1, 1, G, hd)
+    # --- scratch ---
+    m_ref,               # (G, 1) f32
+    l_ref,               # (G, 1) f32
+    acc_ref,             # (G, hd) f32
+    *, page: int, max_pages: int,
+):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # (G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)                 # (page, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * (1.0 / math.sqrt(q.shape[-1]))                 # (G, page)
+
+    pos = i * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = pos < lengths_ref[b]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                                    # (G, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)          # (G, page)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(i == max_pages - 1)
+    def _out():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths,
+                           *, interpret: bool = False):
+    """q: (B, H, hd); k/v_pages: (P, page, Hkv, hd);
+    block_tables: (B, maxp) int32 (pad with 0); lengths: (B,) int32.
+    Returns (B, H, hd)."""
+    b, h, hd = q.shape
+    n_pages, page, hkv, _ = k_pages.shape
+    g = h // hkv
+    maxp = block_tables.shape[1]
+    q4 = q.reshape(b, hkv, g, hd)
+
+    grid = (b, hkv, maxp)
+
+    def q_map(bi, hi, ii, bt, ln):
+        return (bi, hi, 0, 0)
+
+    def kv_map(bi, hi, ii, bt, ln):
+        return (bt[bi, ii], 0, hi, 0)
+
+    def o_map(bi, hi, ii, bt, ln):
+        return (bi, hi, 0, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, page=page, max_pages=maxp),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, g, hd), q_map),
+                pl.BlockSpec((1, page, 1, hd), kv_map),
+                pl.BlockSpec((1, page, 1, hd), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, hd), o_map),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, q4, k_pages, v_pages)
+    return out.reshape(b, h, hd)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+These are deliberately naive (gather everything, masked softmax) — tests
+sweep shapes/dtypes and assert_allclose kernels (interpret=True) against
+these.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, lengths):
+    """q: (B, H, hd); pages: (P, page, Hkv, hd); block_tables: (B, maxp);
+    lengths: (B,).  Returns (B, H, hd)."""
+    b, h, hd = q.shape
+    page = k_pages.shape[1]
+    hkv = k_pages.shape[2]
+    g = h // hkv
+    maxp = block_tables.shape[1]
+    # gather pages -> (B, maxp*page, Hkv, hd)
+    k = k_pages[block_tables].reshape(b, maxp * page, hkv, hd)
+    v = v_pages[block_tables].reshape(b, maxp * page, hkv, hd)
+    q4 = q.reshape(b, hkv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", q4, k.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    pos = jnp.arange(maxp * page)[None, :]
+    mask = pos < lengths[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, hd).astype(q.dtype)
+
+
+def chunked_prefill_attention_ref(q, k_cache, v_cache, cache_lens):
+    """Chunked-prefill attention: the new chunk's K/V are ALREADY written
+    into the cache at [cache_lens - Sq, cache_lens).
+
+    q: (B, Sq, H, hd) — queries of the chunk; k/v_cache: (B, Smax, Hkv, hd);
+    cache_lens: (B,) total valid tokens INCLUDING the chunk.
+    Query row j sits at absolute position cache_lens - Sq + j and attends
+    causally.  Returns (B, Sq, H, hd).
+    """
+    b, sq, h, hd = q.shape
+    smax, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    q5 = q.reshape(b, sq, hkv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q5, k_cache.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    q_pos = (cache_lens[:, None] - sq + jnp.arange(sq)[None, :])   # (B, Sq)
+    k_pos = jnp.arange(smax)[None, :]
+    mask = k_pos[:, None, :] <= q_pos[..., None]                   # (B,Sq,Smax)
+    s = jnp.where(mask[:, None, None, :, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def block_gather_ref(pool, indices):
+    """pool: (P, page, ...); indices: (n,) -> (n, page, ...)."""
+    return pool[indices]

@@ -1,0 +1,284 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture × input shape) cell on the 16×16 single-pod mesh AND the
+2×16×16 multi-pod mesh, prove it fits 16 GiB/chip, and extract the roofline
+terms (FLOPs / bytes / collective bytes) from the compiled artifact.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single --out experiments/dryrun
+
+Results land as JSON under --out (default experiments/dryrun/) — one file
+per (arch, shape, mesh) — and feed EXPERIMENTS.md §Dry-run / §Roofline.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from . import hlo_cost
+from ..configs import ARCH_IDS, get
+from ..distributed.sharding import ShardingPolicy
+from .mesh import make_production_mesh
+from .steps import SHAPES, build_cell, cell_supported
+
+# TPU v5e constants (per chip)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_BYTES = 16 * 1024 ** 3
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def cpu_upcast_bytes(hlo_text: str) -> int:
+    """XLA-CPU cannot execute bf16 dots, so it materializes fp32 copies of
+    bf16 weight/cache operands (convert ops).  These temps would NOT exist
+    on the TPU target (native bf16 MXU), so the fit check subtracts them.
+    Heuristic: sum distinct f32 ``convert`` results whose dims exactly match
+    a bf16 ENTRY parameter shard shape."""
+    bf16_param_dims: set[str] = set()
+    in_entry = False
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY "):
+            in_entry = True
+            continue
+        if in_entry and line.startswith("}"):
+            in_entry = False
+        if in_entry:
+            m = re.search(r"= bf16\[([\d,]+)\][^=]*parameter\(", line)
+            if m:
+                bf16_param_dims.add(m.group(1))
+    seen: set[str] = set()
+    total = 0
+    for line in hlo_text.splitlines():
+        m = re.search(r"%(\S+) = f32\[([\d,]+)\]\S* convert\(", line.strip())
+        if m and m.group(2) in bf16_param_dims and m.group(1) not in seen:
+            seen.add(m.group(1))
+            n = 1
+            for d in m.group(2).split(","):
+                n *= int(d)
+            total += 4 * n
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device result bytes of every collective op in the SPMD module."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        eq = s.split(" = ", 1)
+        if len(eq) != 2:
+            continue
+        rhs = eq[1]
+        for coll in _COLLECTIVES:
+            # match the op name exactly (e.g. "all-reduce(" / "all-reduce-start(")
+            if re.search(rf"\b{coll}(-start)?\(", rhs):
+                lhs_shape = rhs.split(coll)[0]
+                out[coll] += _shape_bytes(lhs_shape)
+                counts[coll] += 1
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
+             verbose: bool = True, save_hlo: bool = False,
+             variant: str = "") -> dict:
+    from .steps import parse_variant
+    var = parse_variant(variant)
+    cfg = get(arch)
+    ok, why = cell_supported(cfg, shape)
+    mesh_name = "multi" if multi_pod else "single"
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+           "variant": variant, "ok": False, "skipped": False}
+    if not ok:
+        rec.update(skipped=True, reason=why, ok=True)
+        _save(rec, out_dir)
+        if verbose:
+            print(f"[skip] {arch} × {shape}: {why}")
+        return rec
+    try:
+        t0 = time.time()
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = mesh.devices.size
+        mode = "train" if SHAPES[shape].kind == "train" else "serve"
+        policy = ShardingPolicy(mesh=mesh, mode=mode, **var["policy"])
+        with mesh:
+            jitted, structs, meta = build_cell(cfg, shape, policy,
+                                               **var["build"])
+            lowered = jitted.lower(*structs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        # trip-count-aware reconstruction (XLA cost_analysis counts while
+        # bodies ONCE — hlo_cost multiplies by known_trip_count)
+        acc = hlo_cost.analyze(hlo)
+        coll = {k: acc["collectives"].get(k, 0.0)
+                for k in _COLLECTIVES}
+        coll["total"] = acc["collectives"]["total"]
+        coll["counts"] = acc["collectives"]["counts"]
+
+        flops = acc["flops"]
+        bytes_hbm = acc["bytes"]
+        raw_flops = float(cost.get("flops", 0.0)) if cost else 0.0
+        arg_b = getattr(mem, "argument_size_in_bytes", 0)
+        out_b = getattr(mem, "output_size_in_bytes", 0)
+        tmp_b = getattr(mem, "temp_size_in_bytes", 0)
+        alias_b = getattr(mem, "alias_size_in_bytes", 0)
+        per_dev = arg_b + out_b + tmp_b - alias_b
+        upcast_b = cpu_upcast_bytes(hlo)
+        # distinct converts may share buffers — never subtract below args+out
+        per_dev_tpu = arg_b + out_b - alias_b + max(tmp_b - upcast_b, 0)
+
+        # roofline terms (seconds) — spec formulas; flops/bytes from the
+        # partitioned per-device module are multiplied back to cluster
+        # totals by XLA already? No: cost_analysis on the SPMD-compiled
+        # executable reports PER-DEVICE numbers, so divide by per-chip peaks.
+        compute_s = flops / PEAK_FLOPS
+        memory_s = bytes_hbm / HBM_BW
+        collective_s = coll["total"] / ICI_BW
+
+        # 6ND for training (fwd+bwd), 2ND for inference passes
+        flop_factor = 6.0 if SHAPES[shape].kind == "train" else 2.0
+        model_flops = flop_factor * cfg.active_param_count() * _tokens(shape)
+        rec.update(
+            ok=True, chips=chips, lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2), meta=meta,
+            memory={"argument": arg_b, "output": out_b, "temp": tmp_b,
+                    "alias": alias_b, "per_device_total": per_dev,
+                    "cpu_upcast_artifact": upcast_b,
+                    "per_device_tpu_estimate": per_dev_tpu,
+                    "fits_16GiB": bool(per_dev_tpu <= HBM_BYTES),
+                    "utilization": per_dev_tpu / HBM_BYTES},
+            hlo_flops_per_device=flops,
+            hlo_bytes_per_device=bytes_hbm,
+            xla_cost_analysis_flops_unscaled=raw_flops,
+            collectives=coll,
+            roofline={"compute_s": compute_s, "memory_s": memory_s,
+                      "collective_s": collective_s,
+                      "dominant": max(
+                          [("compute", compute_s), ("memory", memory_s),
+                           ("collective", collective_s)],
+                          key=lambda kv: kv[1])[0]},
+            model_flops_total=model_flops,
+            useful_flops_ratio=(model_flops / (flops * chips)
+                                if flops else 0.0),
+        )
+        if save_hlo:
+            with open(os.path.join(out_dir,
+                                   f"{arch}__{shape}__{mesh_name}.hlo.txt"),
+                      "w") as f:
+                f.write(hlo)
+        if verbose:
+            r = rec["roofline"]
+            print(f"[ok]   {arch} × {shape} × {mesh_name}: "
+                  f"{per_dev_tpu/2**30:.2f} GiB/dev "
+                  f"(fits={rec['memory']['fits_16GiB']}), "
+                  f"compute={r['compute_s']*1e3:.2f}ms "
+                  f"memory={r['memory_s']*1e3:.2f}ms "
+                  f"coll={r['collective_s']*1e3:.2f}ms "
+                  f"-> {r['dominant']}-bound; "
+                  f"compile {t_compile:.0f}s")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[FAIL] {arch} × {shape} × {mesh_name}: {rec['error']}")
+    _save(rec, out_dir)
+    return rec
+
+
+def _tokens(shape: str) -> int:
+    sp = SHAPES[shape]
+    if sp.kind == "train":
+        return sp.batch * sp.seq
+    if sp.kind == "prefill":
+        return sp.batch * sp.seq
+    return sp.batch            # decode: one token per request
+
+
+def _save(rec: dict, out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{rec['variant'].replace('=','').replace(',','_')}" \
+        if rec.get("variant") else ""
+    path = os.path.join(
+        out_dir,
+        f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{suffix}.json")
+    slim = {k: v for k, v in rec.items() if k != "trace"}
+    with open(path, "w") as f:
+        json.dump(slim, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--variant", default="",
+                    help="e.g. 'mb=8,attn=dense,grad_rs=1,fsdp=0'")
+    ap.add_argument("--assigned-only", action="store_true",
+                    help="skip the two paper-eval models")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    if args.assigned_only:
+        archs = [a for a in archs if a not in ("qwen2_7b", "qwen3_32b")]
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, args.out,
+                               save_hlo=args.save_hlo,
+                               variant=args.variant)
+                n_ok += rec["ok"]
+                n_fail += not rec["ok"]
+    print(f"\ndry-run complete: {n_ok} ok, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

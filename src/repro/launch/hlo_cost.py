@@ -1,0 +1,462 @@
+"""Trip-count-aware cost model over compiled (SPMD-partitioned) HLO text.
+
+``compiled.cost_analysis()`` counts every computation ONCE — a 62-layer
+scan (while loop) contributes a single layer's FLOPs.  This module walks
+the HLO module text, multiplies each computation by the product of
+enclosing while-loop trip counts (``backend_config known_trip_count``),
+and reconstructs:
+
+  * flops        — dot ops: 2 * prod(result dims) * prod(contracting dims)
+  * bytes        — HBM traffic estimate: operand + result bytes of
+                   fusion-boundary ops (fusion/dot/copy/scatter/gather/DUS/
+                   collectives/parameters are NOT counted — parameters are
+                   resident, not streamed per op — but each op's operand
+                   reads and result writes are)
+  * collectives  — per-kind result bytes of collective ops, trip-weighted
+
+All numbers are PER DEVICE (the SPMD module is the per-device program).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_CALLED_SINGLE_RE = re.compile(
+    r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_CALLED_MULTI_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+
+
+def _shape_list(s: str):
+    """All (dtype, dims) in a type string (handles tuples)."""
+    out = []
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        if dt in _DTYPE_BYTES:
+            d = [int(x) for x in dims.split(",")] if dims else []
+            out.append((dt, d))
+    return out
+
+
+def _bytes_of(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class _Instr:
+    name: str
+    result_shapes: list
+    op: str
+    operands: list          # operand instruction names (same computation)
+    called: list            # computation names this instruction invokes
+    trip: int = 1           # while trip count (while ops only)
+    dot_contract: int = 1   # product of contracting dims (dot only)
+    line: str = ""
+
+
+@dataclass
+class _Comp:
+    name: str
+    instrs: dict = field(default_factory=dict)
+    root: str = ""  # name of the ROOT instruction
+
+
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def parse_module(text: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        # computation headers: "%name (params) -> type {" or "ENTRY %name ..."
+        if (line.startswith("%") or line.startswith("ENTRY")) \
+                and s.endswith("{"):
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", s)
+            if m:
+                cur = _Comp(m.group(1))
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    comps["__entry__"] = cur
+            continue
+        if s == "}" or s.startswith("}"):
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        if line.lstrip().startswith("ROOT"):
+            cur.root = name
+        rhs = rhs.strip()
+        # split "<type> <op>(<args>)..." — the type may be a tuple "(...)"
+        if rhs.startswith("("):
+            depth = 0
+            type_end = -1
+            for i, ch in enumerate(rhs):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        type_end = i + 1
+                        break
+            if type_end < 0:
+                continue
+            type_str = rhs[:type_end]
+            rest = rhs[type_end:].strip()
+        else:
+            paren0 = rhs.find("(")
+            if paren0 < 0:
+                continue
+            head = rhs[:paren0].strip()
+            toks = head.split()
+            type_str = " ".join(toks[:-1])
+            rest = (toks[-1] if toks else "") + rhs[paren0:]
+        paren = rest.find("(")
+        if paren < 0:
+            continue
+        op = rest[:paren].strip()
+        args_str = rest[paren + 1:]
+        depth, end = 1, 0
+        for i, ch in enumerate(args_str):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = _OPERAND_RE.findall(args_str[:end])
+        attrs = args_str[end:]
+        called = _CALLED_SINGLE_RE.findall(attrs)
+        for grp in _CALLED_MULTI_RE.findall(attrs):
+            called.extend(c.strip().lstrip("%") for c in grp.split(","))
+        instr = _Instr(name=name, result_shapes=_shape_list(type_str),
+                       op=op, operands=operands, called=called)
+        if op == "while":
+            tm = _TRIP_RE.search(rhs)
+            instr.trip = int(tm.group(1)) if tm else 1
+        if op == "dot":
+            cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+            # contracting sizes come from the lhs operand's shape
+            instr.dot_contract = -1     # resolved later
+            instr._cdims = [int(x) for x in
+                            cdims.group(1).split(",")] if cdims and \
+                cdims.group(1) else []
+        cur.instrs[name] = instr
+    return comps
+
+
+def _multipliers(comps: dict[str, _Comp]) -> dict[str, int]:
+    """computation name -> product of enclosing trip counts."""
+    mult: dict[str, int] = {}
+    entry = comps.get("__entry__")
+    if entry is None:
+        return {}
+    stack = [(entry.name, 1)]
+    while stack:
+        cname, m = stack.pop()
+        if cname not in comps:
+            continue
+        if mult.get(cname, 0) >= m:
+            continue
+        mult[cname] = max(mult.get(cname, 0), m)
+        comp = comps[cname]
+        for ins in comp.instrs.values():
+            for callee in ins.called:
+                k = m * (ins.trip if ins.op == "while" else 1)
+                stack.append((callee, k))
+    return mult
+
+
+# Ops whose operand/result traffic is counted as HBM bytes.  Pure
+# elementwise chains (add/mul/exp/select/compare/...), broadcasts, iota,
+# reshapes and converts are EXCLUDED: on the TPU target XLA fuses them into
+# the producing/consuming kernel, so counting them models a no-fusion
+# worst case that the CPU test backend exhibits but real hardware does not.
+_MEM_OPS = {"fusion", "dot", "copy", "scatter", "gather", "dynamic-slice",
+            "dynamic-update-slice", "transpose", "concatenate", "pad",
+            "reduce", "convolution", "slice", "reduce-window",
+            "select-and-scatter", "sort"}
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "while", "conditional", "call", "after-all",
+             "custom-call", "partition-id", "replica-id", "domain",
+             "opt-barrier", "rng", "rng-bit-generator", "convert",
+             "broadcast", "iota", "reshape", "add", "multiply", "select",
+             "compare", "exponential", "rsqrt", "tanh", "divide",
+             "subtract", "maximum", "minimum", "clamp", "negate", "power",
+             "and", "or", "xor", "sqrt", "log", "sign", "floor", "ceil"}
+
+
+def _bf16_entry_dims(text: str) -> set:
+    dims = set()
+    in_entry = False
+    for line in text.splitlines():
+        if line.startswith("ENTRY "):
+            in_entry = True
+            continue
+        if in_entry and line.startswith("}"):
+            break
+        if in_entry:
+            m = re.search(r"= bf16\[([\d,]+)\][^=]*parameter\(", line)
+            if m:
+                d = tuple(int(x) for x in m.group(1).split(","))
+                dims.add(d)
+                if len(d) > 1:
+                    dims.add(d[1:])   # per-layer slice of a scan-stacked param
+    return dims
+
+
+def analyze(text: str) -> dict:
+    comps = parse_module(text)
+    mult = _multipliers(comps)
+    bf16_dims = _bf16_entry_dims(text)
+
+    def tpu_bytes(shapes) -> int:
+        """Bytes with f32 mirrors of bf16 inputs charged at bf16 width —
+        XLA-CPU upcasts bf16 dot operands to f32; the TPU MXU reads bf16
+        natively, so those tensors are half the size on the target."""
+        total = 0
+        for dt, dims in shapes:
+            n = 1
+            for d in dims:
+                n *= d
+            w = _DTYPE_BYTES[dt]
+            if dt == "f32" and tuple(dims) in bf16_dims:
+                w = 2
+            total += n * w
+        return total
+    # computations that are fusion bodies: their interior ops are NOT at the
+    # HBM boundary — count their dot flops but not their bytes.
+    fusion_bodies: set = set()
+    for comp in comps.values():
+        for ins in comp.instrs.values():
+            if ins.op == "fusion":
+                fusion_bodies.update(ins.called)
+    flops = 0.0
+    bytes_hbm = 0.0
+    coll = {k: 0.0 for k in COLLECTIVES}
+    coll_counts = {k: 0 for k in COLLECTIVES}
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname, 0)
+        if m == 0:
+            continue
+        for ins in comp.instrs.values():
+            rbytes = _bytes_of(ins.result_shapes)
+            # --- collectives ---
+            matched = None
+            for ck in COLLECTIVES:
+                if ins.op == ck or ins.op == ck + "-start":
+                    matched = ck
+                    break
+            if matched:
+                # XLA-CPU upcasts the bf16 compute stream to f32, so its
+                # collectives carry f32 payloads; the TPU target keeps
+                # weights/activations/grads in bf16 end-to-end and its
+                # collectives move HALF the bytes.  Charge f32 collective
+                # payloads at bf16 width (f32-native payloads — e.g. CE
+                # statistics — are small).
+                cb = 0
+                for dt, dims in ins.result_shapes:
+                    n = 1
+                    for d in dims:
+                        n *= d
+                    w = 2 if dt == "f32" else _DTYPE_BYTES[dt]
+                    cb += n * w
+                coll[matched] += m * cb
+                coll_counts[matched] += m
+                bytes_hbm += m * cb
+                continue
+            # --- dot flops ---
+            if ins.op == "dot":
+                lhs = comp.instrs.get(ins.operands[0]) if ins.operands else None
+                csize = 1
+                if lhs is not None and lhs.result_shapes:
+                    dims = lhs.result_shapes[0][1]
+                    for cd in getattr(ins, "_cdims", []):
+                        if cd < len(dims):
+                            csize *= dims[cd]
+                n_out = 1
+                for _, dd in ins.result_shapes:
+                    for d in dd:
+                        n_out *= d
+                flops += m * 2.0 * n_out * csize
+            # --- bytes: result write + operand reads at fusion boundary ---
+            if cname in fusion_bodies:
+                continue
+            if ins.op in _SKIP_OPS:
+                continue
+            if ins.op == "fusion" or ins.op in _MEM_OPS:
+                rb = tpu_bytes(ins.result_shapes)
+                operand_bytes = []
+                for on in ins.operands:
+                    src = comp.instrs.get(on)
+                    if src is None:
+                        continue
+                    # charge converts (CPU f32-upcast artifact) at the
+                    # size of their source operand
+                    if src.op == "convert" and src.operands:
+                        src2 = comp.instrs.get(src.operands[0])
+                        if src2 is not None:
+                            operand_bytes.append(
+                                tpu_bytes(src2.result_shapes))
+                            continue
+                    operand_bytes.append(tpu_bytes(src.result_shapes))
+                ob = sum(operand_bytes)
+                # dynamic-update-slice executes IN PLACE on the TPU target
+                # (buffer aliasing): traffic = the update slice read+write,
+                # not the whole target buffer.
+                def _root_is_dus() -> bool:
+                    for cal in ins.called:
+                        cc = comps.get(cal)
+                        if cc is None or not cc.root:
+                            continue
+                        r = cc.instrs.get(cc.root)
+                        hops = 0
+                        while r is not None and hops < 8:
+                            if r.op == "dynamic-update-slice":
+                                return True
+                            if r.op in ("convert", "bitcast") and r.operands:
+                                r = cc.instrs.get(r.operands[0])
+                                hops += 1
+                                continue
+                            break
+                    return False
+
+                def _root_is(opname: str) -> bool:
+                    for cal in ins.called:
+                        cc = comps.get(cal)
+                        if cc is None or not cc.root:
+                            continue
+                        r = cc.instrs.get(cc.root)
+                        hops = 0
+                        while r is not None and hops < 8:
+                            if r.op == opname:
+                                return True
+                            if r.op in ("convert", "bitcast") and r.operands:
+                                r = cc.instrs.get(r.operands[0])
+                                hops += 1
+                                continue
+                            break
+                    return False
+
+                is_dus = (ins.op == "dynamic-update-slice"
+                          or (ins.op == "fusion" and _root_is_dus()))
+                is_ds = (ins.op == "dynamic-slice"
+                         or (ins.op == "fusion"
+                             and _root_is("dynamic-slice")))
+                if is_dus and operand_bytes:
+                    big = max(operand_bytes)
+                    upd = ob - big
+                    bytes_hbm += m * 2 * upd
+                elif is_ds:
+                    # dynamic-slice reads only the slice, not the operand
+                    bytes_hbm += m * rb
+                else:
+                    bytes_hbm += m * (rb + ob)
+    coll_total = sum(coll.values())
+    return {"flops": flops, "bytes": bytes_hbm,
+            "collectives": {**{k: v for k, v in coll.items()},
+                            "total": coll_total, "counts": coll_counts}}
+
+
+def breakdown(text: str, top: int = 15):
+    """Debug: top byte contributors as (bytes, op, mult, result-shape)."""
+    import collections
+    comps = parse_module(text)
+    mult = _multipliers(comps)
+    full = analyze(text)          # ensures same semantics
+    rows = collections.Counter()
+    bf16_dims = _bf16_entry_dims(text)
+
+    def tb(shapes):
+        total = 0
+        for dt, dims in shapes:
+            n = 1
+            for d in dims:
+                n *= d
+            w = _DTYPE_BYTES[dt]
+            if dt == "f32" and tuple(dims) in bf16_dims:
+                w = 2
+            total += n * w
+        return total
+
+    fusion_bodies = set()
+    for comp in comps.values():
+        for ins in comp.instrs.values():
+            if ins.op == "fusion":
+                fusion_bodies.update(ins.called)
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname, 0)
+        if not m or cname in fusion_bodies:
+            continue
+        for ins in comp.instrs.values():
+            if ins.op in _SKIP_OPS or (ins.op != "fusion"
+                                       and ins.op not in _MEM_OPS):
+                continue
+            ob = []
+            for on in ins.operands:
+                src = comp.instrs.get(on)
+                if src is None:
+                    continue
+                if src.op == "convert" and src.operands:
+                    s2 = comp.instrs.get(src.operands[0])
+                    if s2 is not None:
+                        ob.append(tb(s2.result_shapes))
+                        continue
+                ob.append(tb(src.result_shapes))
+
+            def root_is(opname):
+                for cal in ins.called:
+                    cc = comps.get(cal)
+                    if cc is None or not cc.root:
+                        continue
+                    r = cc.instrs.get(cc.root)
+                    hops = 0
+                    while r is not None and hops < 8:
+                        if r.op == opname:
+                            return True
+                        if r.op in ("convert", "bitcast") and r.operands:
+                            r = cc.instrs.get(r.operands[0])
+                            hops += 1
+                            continue
+                        break
+                return False
+
+            rb = tb(ins.result_shapes)
+            if (ins.op == "dynamic-update-slice"
+                    or (ins.op == "fusion" and root_is("dynamic-update-slice"))):
+                tot = m * 2 * (sum(ob) - max(ob)) if ob else 0
+                tag = "DUS"
+            elif (ins.op == "dynamic-slice"
+                  or (ins.op == "fusion" and root_is("dynamic-slice"))):
+                tot = m * rb
+                tag = "DS"
+            else:
+                tot = m * (rb + sum(ob))
+                tag = ins.op
+            sh = str(ins.result_shapes[0]) if ins.result_shapes else "?"
+            rows[(tag, m, sh[:64])] += tot
+    return rows.most_common(top), full

@@ -1,0 +1,46 @@
+"""Serving launcher: run the cluster simulator at paper scale or the real
+CPU engine demo.
+
+    PYTHONPATH=src python -m repro.launch.serve --mode sim \
+        --dataset industrial --rate 120 --sched slidebatching --router gorouting
+    PYTHONPATH=src python -m repro.launch.serve --mode real
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["sim", "real"], default="sim")
+    ap.add_argument("--dataset", default="sharegpt")
+    ap.add_argument("--rate", type=float, default=80.0)
+    ap.add_argument("--duration", type=float, default=20.0)
+    ap.add_argument("--sched", default="slidebatching")
+    ap.add_argument("--router", default="gorouting")
+    ap.add_argument("--pd", choices=["coloc", "disagg"], default="coloc")
+    ap.add_argument("--instances", type=int, default=4)
+    ap.add_argument("--decode-instances", type=int, default=0)
+    ap.add_argument("--model", default="qwen2-7b")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.mode == "real":
+        import runpy
+        runpy.run_path("examples/priority_serving.py", run_name="__main__")
+        return
+
+    import sys
+    sys.path.insert(0, ".")
+    from benchmarks.common import run_multi_node
+    row, _ = run_multi_node(
+        args.dataset, args.rate, args.sched, args.router,
+        pd_mode=args.pd, n_prefill=args.instances,
+        n_decode=args.decode_instances, model=args.model,
+        duration=args.duration, seed=args.seed)
+    print(json.dumps(row, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,269 @@
+"""Step builders + ShapeDtypeStruct input specs for every
+(architecture × input-shape) cell — shared by dryrun.py, train.py, serve.py.
+
+Shapes (assigned set):
+    train_4k     seq 4096,   global batch 256   -> train_step
+    prefill_32k  seq 32768,  global batch 32    -> prefill_step
+    decode_32k   seq 32768,  global batch 128   -> serve_step (1 new token)
+    long_500k    seq 524288, global batch 1     -> serve_step; SSM/hybrid only
+
+No device memory is allocated here: params/optimizer/cache all come from
+``jax.eval_shape``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..distributed.sharding import (ShardingPolicy, cache_specs,
+                                    make_shard_fn, param_specs)
+from ..models.model import ArchConfig, decode_step, init_params, prefill
+from ..training.optimizer import init_adamw
+from ..training.train import make_train_step
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_supported(cfg: ArchConfig, shape: str) -> tuple[bool, str]:
+    """DESIGN.md §4 skip rules."""
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch: 524k-token KV is not "
+                       "sub-quadratic — skipped per spec")
+    return True, ""
+
+
+# --------------------------------------------------------------------------
+# abstract inputs
+# --------------------------------------------------------------------------
+
+def params_struct(cfg: ArchConfig):
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k, dtype=COMPUTE_DTYPE),
+        jax.random.PRNGKey(0))
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def cache_struct(cfg: ArchConfig, batch: int, max_seq: int):
+    """Mirror of the cache pytree prefill() builds (eval_shape'd)."""
+    def build():
+        toks = jnp.zeros((batch, 8), jnp.int32)
+        kw = {}
+        if cfg.family == "encdec":
+            kw["enc_inputs"] = jnp.zeros(
+                (batch, cfg.enc_frames, cfg.d_model), COMPUTE_DTYPE)
+        _, cache = prefill(cfg, init_params(cfg, jax.random.PRNGKey(0),
+                                            dtype=COMPUTE_DTYPE),
+                           toks, max_seq=max_seq, **kw)
+        return cache
+    return jax.eval_shape(build)
+
+
+def input_specs(cfg: ArchConfig, shape: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    sp = SHAPES[shape]
+    if sp.kind == "train":
+        d = {"tokens": _sds((sp.batch, sp.seq), jnp.int32),
+             "labels": _sds((sp.batch, sp.seq), jnp.int32)}
+        if cfg.family == "encdec":
+            d["enc_inputs"] = _sds((sp.batch, cfg.enc_frames, cfg.d_model),
+                                   COMPUTE_DTYPE)
+        return d
+    if sp.kind == "prefill":
+        d = {"tokens": _sds((sp.batch, sp.seq), jnp.int32)}
+        if cfg.family == "encdec":
+            d["enc_inputs"] = _sds((sp.batch, cfg.enc_frames, cfg.d_model),
+                                   COMPUTE_DTYPE)
+        return d
+    # decode: one new token against a cache of length `seq`
+    return {"tokens": _sds((sp.batch,), jnp.int32),
+            "cache": cache_struct(cfg, sp.batch, sp.seq)}
+
+
+# --------------------------------------------------------------------------
+# sharded step builders
+# --------------------------------------------------------------------------
+
+def default_microbatches(cfg: ArchConfig, policy: ShardingPolicy) -> int:
+    """Grad-accum heuristic: keep the per-device microbatch at 1-2 seqs."""
+    dp = policy.axis_size(policy.dp)
+    per_dev = max(1, 256 // dp)
+    if cfg.d_model >= 4096:
+        target = 1
+    elif (cfg.d_model >= 1536 or cfg.family in ("ssm", "hybrid", "encdec")):
+        target = 2           # SSD chunk / encoder-attention tensors are heavy
+    else:
+        return 1
+    return max(1, per_dev // target)
+
+
+def build_train_step(cfg: ArchConfig, policy: ShardingPolicy,
+                     microbatches: Optional[int] = None,
+                     compress_grads: bool = False,
+                     attn_impl: Optional[str] = None,
+                     grad_rs: bool = False):
+    mb = (default_microbatches(cfg, policy)
+          if microbatches is None else microbatches)
+    shard_fn = make_shard_fn(cfg, policy)
+    if attn_impl is None:
+        attn_impl = "chunked" if SHAPES["train_4k"].seq >= 2048 else "dense"
+
+    p_struct = params_struct(cfg)
+    p_specs = param_specs(cfg, policy, p_struct)
+    grad_constraint = None
+    if grad_rs:
+        mesh_ = policy.mesh
+
+        def grad_constraint(g):
+            return jax.tree.map(
+                lambda x, sp: jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh_, sp)), g, p_specs,
+                is_leaf=lambda x: False)
+
+    step = make_train_step(cfg, attn_impl=attn_impl, shard_fn=shard_fn,
+                           remat=True, microbatches=mb,
+                           compress_grads=compress_grads,
+                           grad_constraint=grad_constraint)
+    opt_struct = jax.eval_shape(init_adamw, p_struct)
+    opt_specs = jax.tree.map(
+        lambda _: None, opt_struct)  # placeholder, replaced below
+    opt_specs = type(opt_struct)(
+        step=P(),
+        mu=p_specs, nu=p_specs, master=p_specs,
+        err=None if opt_struct.err is None else p_specs)
+    batch_spec = {"tokens": P(policy.dp, None), "labels": P(policy.dp, None)}
+    if cfg.family == "encdec":
+        batch_spec["enc_inputs"] = P(policy.dp, None, None)
+
+    mesh = policy.mesh
+    # None entries (e.g. err=None without compression) are empty pytree
+    # nodes — tree.map skips them automatically.
+    nd = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda s: isinstance(s, P))
+    in_sh = (nd(p_specs), nd(opt_specs), nd(batch_spec))
+    out_sh = (nd(p_specs), nd(opt_specs),
+              {"loss": NamedSharding(mesh, P()),
+               "grad_norm": NamedSharding(mesh, P())})
+    jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(0, 1))
+    structs = (p_struct, opt_struct, input_specs(cfg, "train_4k"))
+    return jitted, structs, {"microbatches": mb}
+
+
+def build_prefill_step(cfg: ArchConfig, policy: ShardingPolicy,
+                       shape: str = "prefill_32k"):
+    sp = SHAPES[shape]
+    shard_fn = make_shard_fn(cfg, policy)
+
+    def fn(params, tokens, enc_inputs=None):
+        kw = {"enc_inputs": enc_inputs} if enc_inputs is not None else {}
+        return prefill(cfg, params, tokens, max_seq=sp.seq,
+                       attn_impl="chunked", shard_fn=shard_fn, **kw)
+
+    p_struct = params_struct(cfg)
+    p_specs = param_specs(cfg, policy, p_struct)
+    mesh = policy.mesh
+    nd = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda s: isinstance(s, P))
+    ins = input_specs(cfg, shape)
+    in_sh = [nd(p_specs), NamedSharding(mesh, P(policy.dp, None))]
+    args = [p_struct, ins["tokens"]]
+    if cfg.family == "encdec":
+        in_sh.append(NamedSharding(mesh, P(policy.dp, None, None)))
+        args.append(ins["enc_inputs"])
+    c_struct = cache_struct(cfg, sp.batch, sp.seq)
+    c_specs = cache_specs(cfg, policy, c_struct)
+    v_ok = cfg.vocab % policy.axis_size(policy.tp) == 0
+    out_sh = (NamedSharding(mesh, P(policy.dp, policy.tp if v_ok else None)),
+              nd(c_specs))
+    jitted = jax.jit(fn, in_shardings=tuple(in_sh), out_shardings=out_sh)
+    return jitted, tuple(args), {}
+
+
+def build_serve_step(cfg: ArchConfig, policy: ShardingPolicy,
+                     shape: str = "decode_32k"):
+    sp = SHAPES[shape]
+    shard_fn = make_shard_fn(cfg, policy)
+
+    def fn(params, cache, tokens):
+        return decode_step(cfg, params, cache, tokens, shard_fn=shard_fn)
+
+    p_struct = params_struct(cfg)
+    p_specs = param_specs(cfg, policy, p_struct)
+    ins = input_specs(cfg, shape)
+    c_struct = ins["cache"]
+    c_specs = cache_specs(cfg, policy, c_struct)
+    mesh = policy.mesh
+    nd = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda s: isinstance(s, P))
+    v_ok = cfg.vocab % policy.axis_size(policy.tp) == 0
+    b_ax = policy.dp_if(ins["tokens"].shape[0])
+    in_sh = (nd(p_specs), nd(c_specs), NamedSharding(mesh, P(b_ax)))
+    out_sh = (NamedSharding(mesh, P(b_ax, policy.tp if v_ok else None)),
+              nd(c_specs))
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(1,))
+    return jitted, (p_struct, c_struct, ins["tokens"]), {}
+
+
+def build_cell(cfg: ArchConfig, shape: str, policy: ShardingPolicy,
+               **kw):
+    kind = SHAPES[shape].kind
+    if kind == "train":
+        return build_train_step(cfg, policy, **kw)
+    if kind == "prefill":
+        return build_prefill_step(cfg, policy, shape)
+    return build_serve_step(cfg, policy, shape)
+
+
+def parse_variant(text: Optional[str]) -> dict:
+    """'mb=8,attn=dense,grad_rs=1,fsdp=0' -> build kwargs + policy tweaks."""
+    out: dict = {"build": {}, "policy": {}}
+    if not text:
+        return out
+    for kv in text.split(","):
+        k, _, v = kv.partition("=")
+        k, v = k.strip(), v.strip()
+        if k in ("mb", "microbatches"):
+            out["build"]["microbatches"] = int(v)
+        elif k in ("attn", "attn_impl"):
+            out["build"]["attn_impl"] = v
+        elif k == "grad_rs":
+            out["build"]["grad_rs"] = bool(int(v))
+        elif k == "compress":
+            out["build"]["compress_grads"] = bool(int(v))
+        elif k == "fsdp":
+            out["policy"]["fsdp"] = bool(int(v))
+        elif k == "sp":
+            out["policy"]["sp"] = bool(int(v))
+        elif k == "seqkv":
+            out["policy"]["seq_sharded_kv"] = bool(int(v))
+        else:
+            raise ValueError(f"unknown variant key {k}")
+    return out

@@ -1,0 +1,60 @@
+"""Training launcher: smoke-scale real training on CPU, or lower/compile a
+full-scale sharded train step (see dryrun.py for the multi-pod version).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1_5_0_5b --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1_5_0_5b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_smoke
+    from repro.models import init_params
+    from repro.training import (CheckpointManager, TokenPipeline,
+                                init_adamw, make_train_step)
+
+    cfg = get_smoke(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_adamw(params, compress=args.compress_grads)
+    step_fn = jax.jit(make_train_step(cfg, remat=False, lr=args.lr,
+                                      compress_grads=args.compress_grads))
+    pipe = TokenPipeline(cfg.vocab, args.batch, args.seq, seed=0,
+                         enc_frames=cfg.enc_frames, d_model=cfg.d_model)
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if mgr is not None and mgr.latest_step() is not None:
+        restored, start = mgr.restore({"p": params, "o": opt})
+        params, opt = restored["p"], restored["o"]
+        print(f"resumed from step {start}")
+
+    t0 = time.time()
+    for i in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()}
+        params, opt, m = step_fn(params, opt, batch)
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss {float(m['loss']):.4f} "
+                  f"gnorm {float(m['grad_norm']):.3f}")
+        if mgr is not None and (i + 1) % args.ckpt_every == 0:
+            mgr.save_async(i + 1, {"p": params, "o": opt})
+    if mgr is not None:
+        mgr.wait()
+    print(f"done: {args.steps - start} steps in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""JAX model substrate: config-driven transformers (dense/MoE/SSM/hybrid/
+enc-dec) with scan-over-layers, serving caches and sharding hooks."""
+from .model import ArchConfig, init_params, forward, prefill, decode_step
+from .layers import (dense_attention, chunked_attention, decode_attention,
+                     apply_rope, rmsnorm, layernorm)
+from .ssm import SSMSpec, SSMState, ssd_chunked, ssd_decode_step
+from .moe import moe_forward, moe_ref
+
+__all__ = ["ArchConfig", "init_params", "forward", "prefill", "decode_step",
+           "dense_attention", "chunked_attention", "decode_attention",
+           "apply_rope", "rmsnorm", "layernorm", "SSMSpec", "SSMState",
+           "ssd_chunked", "ssd_decode_step", "moe_forward", "moe_ref"]

@@ -1,0 +1,42 @@
+"""KV / state cache pytrees for serving.
+
+Contiguous per-request caches (dense layout) are used by `serve_step` and
+the dry-run; the real CPU engine uses the paged pool in serving/kv_pool.py
+(same bytes, block-granular).  Hybrid archs carry a ring-buffer window cache
+plus SSM state; pure SSM archs carry state only — that is what makes the
+``long_500k`` decode shape feasible (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def init_attn_cache(n_layers: int, batch: int, max_seq: int,
+                    n_kv_heads: int, head_dim: int, dtype=jnp.bfloat16):
+    shape = (n_layers, batch, max_seq, n_kv_heads, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "len": jnp.zeros((batch,), jnp.int32)}
+
+
+def update_layer_cache(k_cache, v_cache, k_new, v_new, lengths):
+    """Insert (B, S_new, Hkv, D) at per-batch offsets into (B, Smax, ...)."""
+    s_new = k_new.shape[1]
+    idx = lengths[:, None] + jnp.arange(s_new)[None, :]      # (B, S_new)
+    b_idx = jnp.arange(k_new.shape[0])[:, None]
+    k_cache = k_cache.at[b_idx, idx].set(k_new)
+    v_cache = v_cache.at[b_idx, idx].set(v_new)
+    return k_cache, v_cache
+
+
+def update_ring_cache(k_cache, v_cache, k_new, v_new, lengths, window: int):
+    """Ring-buffer insert for sliding-window caches (slot = pos % window)."""
+    s_new = k_new.shape[1]
+    pos = lengths[:, None] + jnp.arange(s_new)[None, :]
+    slot = pos % window
+    b_idx = jnp.arange(k_new.shape[0])[:, None]
+    k_cache = k_cache.at[b_idx, slot].set(k_new)
+    v_cache = v_cache.at[b_idx, slot].set(v_new)
+    return k_cache, v_cache

@@ -1,0 +1,265 @@
+"""Shared neural building blocks (pure-functional JAX).
+
+Everything here is sharding-agnostic: distribution is imposed from outside
+via parameter PartitionSpecs and ``with_sharding_constraint`` on activations
+(src/repro/distributed/sharding.py).
+
+Attention comes in three interchangeable implementations:
+  * ``dense``   — plain softmax(QKᵀ)V; reference + smoke tests.
+  * ``chunked`` — flash-style online-softmax lax.scan over KV blocks; the
+    XLA production path for long-context prefill (no S² score buffer).
+  * the Pallas kernels in repro.kernels are the TPU hot path and are
+    validated against ``dense`` in interpret mode.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# normalization
+# --------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dtype) * scale
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dtype) * scale + bias
+
+
+def apply_norm(x, p, kind: str):
+    if kind == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings (full, partial — chatglm "2d" = half dims — and none)
+# --------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, fraction: float, theta: float = 1e4):
+    rot = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, fraction: float = 1.0,
+               theta: float = 1e4) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    inv, rot = rope_frequencies(head_dim, fraction, theta)
+    if rot == 0:
+        return x
+    ang = positions.astype(jnp.float32)[..., None] * inv      # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]                          # (..., S, 1, rot/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    y = jnp.stack([y1, y2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([y.astype(x.dtype), x_pass], axis=-1)
+
+
+def sinusoidal_positions(seq: int, d: int, dtype=jnp.float32) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(1e4, dim / d)
+    pe = jnp.zeros((seq, d), dtype=jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang[:, : (d // 2)]))
+    return pe.astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# attention cores
+# --------------------------------------------------------------------------
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    """(B, S, Hkv, D) -> (B, S, Hkv*groups, D) for GQA."""
+    if groups == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, groups, d)
+                            ).reshape(b, s, h * groups, d)
+
+
+def dense_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    *, causal: bool = True,
+                    q_offset: Optional[jax.Array] = None,
+                    kv_len: Optional[jax.Array] = None,
+                    window: int = 0, shard_fn=None) -> jax.Array:
+    """Reference attention.
+
+    q: (B, Sq, H, D);  k, v: (B, Skv, Hkv, D).
+    ``q_offset``: absolute position of q[0] (for chunked prefill the chunk
+    starts at the existing context length).  ``kv_len``: per-batch valid KV
+    length (for decode over padded caches).  ``window``: sliding-window
+    size (0 = full).
+    """
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    sh = shard_fn or (lambda x, kind: x)
+    g = h // hkv
+    if g == 1:
+        # MHA: plain layout (the 5-D grouped form only adds transposes)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k)[:, :, None] / math.sqrt(d)
+        scores = scores.reshape(b, hkv, 1, sq, skv)
+    else:
+        # GQA-aware contraction: K/V are NEVER materialized at h query
+        # heads — repeating K before the seq all-gather moves G x the bytes.
+        q5 = q.reshape(b, sq, hkv, g, d)
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", q5, k) / math.sqrt(d)
+    # keep the score tile q-sharded: without this XLA may replicate the
+    # whole attention across the model axis
+    scores = sh(scores.astype(jnp.float32), "attn_scores")
+    q_pos = jnp.arange(sq)
+    if q_offset is not None:
+        q_pos = q_pos + q_offset[..., None] if q_offset.ndim else q_pos + q_offset
+    k_pos = jnp.arange(skv)
+    if q_pos.ndim == 1:
+        rel = q_pos[:, None] >= k_pos[None, :]
+        mask = rel if causal else jnp.ones((sq, skv), dtype=bool)
+        if window > 0:
+            mask = mask & (q_pos[:, None] - k_pos[None, :] < window)
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    if kv_len is not None:
+        valid = k_pos[None, :] < kv_len[:, None]            # (B, Skv)
+        scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    probs = sh(jax.nn.softmax(scores, axis=-1).astype(q.dtype),
+               "attn_scores")
+    if g == 1:
+        o = jnp.einsum("bhqk,bkhd->bqhd", probs[:, :, 0], v)
+        return o
+    o = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return o.reshape(b, sq, h, d)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      *, causal: bool = True, q_offset: int = 0,
+                      window: int = 0, kv_chunk: int = 512) -> jax.Array:
+    """Flash-style attention: lax.scan over KV chunks with an online softmax
+    so the (Sq, Skv) score matrix is never materialized — the XLA path for
+    32k+ prefill.  Assumes un-padded contiguous KV.
+    """
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    groups = h // hkv
+    nchunks = -(-skv // kv_chunk)
+    pad = nchunks * kv_chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nchunks, kv_chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nchunks, kv_chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+    q_pos = jnp.arange(sq) + q_offset
+    scale = 1.0 / math.sqrt(d)
+
+    def body(carry, xs):
+        m, l, acc = carry                     # (B,H,Sq), (B,H,Sq), (B,H,Sq,D)
+        kb, vb, ci = xs                       # (B,C,Hkv,D), (B,C,Hkv,D), ()
+        kb = _repeat_kv(kb, groups)
+        vb = _repeat_kv(vb, groups)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kb).astype(jnp.float32) * scale
+        k_pos = ci * kv_chunk + jnp.arange(kv_chunk)
+        mask = k_pos[None, :] < skv           # in-bounds (chunk padding)
+        if causal:
+            mask = mask & (q_pos[:, None] >= k_pos[None, :])
+        if window > 0:
+            mask = mask & (q_pos[:, None] - k_pos[None, :] < window)
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vb).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((b, h, sq), dtype=jnp.float32)
+    a0 = jnp.zeros((b, h, sq, d), dtype=jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc, vc, jnp.arange(nchunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype).transpose(0, 2, 1, 3)          # (B,Sq,H,D)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     kv_len: jax.Array, *, window: int = 0,
+                     shard_fn=None) -> jax.Array:
+    """Single-step decode over a padded contiguous cache.
+
+    q: (B, 1, H, D); caches: (B, Smax, Hkv, D); kv_len: (B,) valid lengths.
+    With ``window`` > 0 only the trailing ``window`` positions attend.
+
+    GQA is handled by reshaping q to (B, Hkv, G, D) and contracting against
+    the UN-repeated cache — no (B, S, H, D) broadcast is ever materialized.
+    Distributed decode: the cache arrives sequence-sharded over the "model"
+    axis; constraining the score tensor to the same sharding ("dec_scores")
+    keeps the big tensors local, and the softmax/PV reductions over the
+    sharded axis lower to small all-reduces (flash-decode combine).
+    """
+    sh = shard_fn or (lambda x, kind: x)
+    b, _, h, d = q.shape
+    skv, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    q5 = q.reshape(b, hkv, g, d)
+    s = jnp.einsum("bkgd,bskd->bkgs", q5, k_cache).astype(jnp.float32)
+    s = s / math.sqrt(d)
+    s = sh(s, "dec_scores")                       # (B, Hkv, G, Skv)
+    k_pos = jnp.arange(skv)[None, :]
+    valid = k_pos < kv_len[:, None]
+    if window > 0:
+        valid = valid & (k_pos >= kv_len[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(q.dtype), v_cache)
+    o = o / l[..., 0][..., None].astype(q.dtype)
+    return o.reshape(b, 1, h, d)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def swiglu(x: jax.Array, p: dict) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, p["w_up"])
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, p["w_down"])
+
+
+def gelu_mlp(x: jax.Array, p: dict) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, p["w_up"]) + p["b_up"]
+    h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h, p["w_down"]) + p["b_down"]
+
+
+# --------------------------------------------------------------------------
+# parameter init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))

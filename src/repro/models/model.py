@@ -1,0 +1,582 @@
+"""Config-driven model assembly for all assigned architectures.
+
+One ``ArchConfig`` describes any of the five families
+(dense / moe / ssm / hybrid / encdec); ``init_params`` builds a pytree with
+layer parameters STACKED along a leading axis so the forward pass is a
+single ``lax.scan`` over layers — this keeps the HLO size independent of
+depth (62-layer deepseek compiles as fast as 16-layer olmoe) and is what
+makes the 512-device dry-run tractable.
+
+Public entry points:
+  * ``forward(cfg, params, tokens, ...)``          full-sequence (train)
+  * ``prefill(cfg, params, tokens, max_seq, ...)`` build a serving cache
+  * ``decode_step(cfg, params, cache, tok, ...)``  one token with cache
+  * encoder–decoder variants take ``enc_inputs`` (stub frontend embeddings).
+
+Sharding is injected via an optional ``shard_fn(x, kind)`` callback
+(distributed/sharding.py) — the model stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import kvcache
+from .layers import (apply_norm, apply_rope, chunked_attention,
+                     decode_attention, dense_attention, dense_init, gelu_mlp,
+                     rmsnorm, sinusoidal_positions, split_keys, swiglu)
+from .moe import init_moe, moe_forward
+from .ssm import (SSMSpec, SSMState, init_ssm, init_state, spec_for,
+                  ssd_chunked, ssd_decode_step)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared: int = 0
+    top_k: int = 0
+    d_expert: int = 0
+    capacity_factor: float = 1.25
+    # --- SSM / hybrid ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    # --- attention details ---
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_fraction: float = 1.0
+    rope_theta: float = 1e4
+    window: int = 0              # sliding-window size (hybrid)
+    # --- encoder-decoder ---
+    n_enc_layers: int = 0
+    enc_frames: int = 0          # stub-frontend sequence length
+    # --- misc ---
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    act: str = "swiglu"          # swiglu | gelu
+    notes: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def attn_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for the long_500k shape (DESIGN.md §4 skip rule)."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def ssm_spec(self) -> SSMSpec:
+        return spec_for(self.d_model, self.ssm_state,
+                        head_dim=self.ssm_head_dim, chunk=self.ssm_chunk)
+
+    def param_count(self) -> float:
+        """Analytic total parameter count."""
+        d, hd = self.d_model, self.hd
+        attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) \
+            + self.n_heads * hd * d
+        if self.family == "moe":
+            ff = self.n_experts * 3 * d * self.d_expert \
+                + (3 * d * self.n_shared * self.d_expert) + d * self.n_experts
+        elif self.family == "ssm":
+            attn = 0
+            ff = 0
+        else:
+            ff = 3 * d * self.d_ff if self.act == "swiglu" else 2 * d * self.d_ff
+        ssm = 0
+        if self.family in ("ssm", "hybrid"):
+            sp = self.ssm_spec
+            ssm = d * (2 * sp.d_inner + 2 * sp.d_state + sp.n_heads) \
+                + sp.d_inner * d
+        per_layer = attn + ff + ssm
+        total = self.n_layers * per_layer + 2 * self.vocab * d
+        if self.family == "encdec":
+            enc_ff = 2 * d * self.d_ff
+            total += self.n_enc_layers * (attn + enc_ff) \
+                + self.n_layers * attn        # cross attention
+        return float(total)
+
+    def active_param_count(self) -> float:
+        if self.family != "moe":
+            return self.param_count()
+        d = self.d_model
+        dense_part = self.param_count() - self.n_layers * (
+            self.n_experts * 3 * d * self.d_expert)
+        return dense_part + self.n_layers * (
+            self.top_k * 3 * d * self.d_expert)
+
+
+# --------------------------------------------------------------------------
+# parameter init
+# --------------------------------------------------------------------------
+
+def _init_norm(cfg, dtype):
+    p = {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def _init_attn(cfg: ArchConfig, key, dtype):
+    d, hd = cfg.d_model, cfg.hd
+    ks = split_keys(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.n_heads * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (cfg.n_heads * hd, d),
+                         scale=1.0 / math.sqrt(cfg.n_heads * hd * 2
+                                               * cfg.n_layers), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _init_mlp(cfg: ArchConfig, key, dtype):
+    d = cfg.d_model
+    ks = split_keys(key, 3)
+    if cfg.act == "gelu":
+        return {"w_up": dense_init(ks[0], (d, cfg.d_ff), dtype=dtype),
+                "b_up": jnp.zeros((cfg.d_ff,), dtype),
+                "w_down": dense_init(ks[1], (cfg.d_ff, d), dtype=dtype),
+                "b_down": jnp.zeros((d,), dtype)}
+    return {"w_gate": dense_init(ks[0], (d, cfg.d_ff), dtype=dtype),
+            "w_up": dense_init(ks[1], (d, cfg.d_ff), dtype=dtype),
+            "w_down": dense_init(ks[2], (cfg.d_ff, d), dtype=dtype)}
+
+
+def _init_layer(cfg: ArchConfig, key, dtype):
+    ks = split_keys(key, 4)
+    p = {"ln1": _init_norm(cfg, dtype), "ln2": _init_norm(cfg, dtype)}
+    if cfg.family != "ssm":
+        p["attn"] = _init_attn(cfg, ks[0], dtype)
+    if cfg.family == "moe":
+        p["moe"] = init_moe(ks[1], cfg.d_model, cfg.d_expert, cfg.n_experts,
+                            cfg.n_shared, dtype=dtype)
+    elif cfg.family == "ssm":
+        p["ssm"] = init_ssm(ks[1], cfg.ssm_spec, dtype=dtype)
+    else:
+        p["mlp"] = _init_mlp(cfg, ks[1], dtype)
+    if cfg.family == "hybrid":
+        p["ssm"] = init_ssm(ks[2], cfg.ssm_spec, dtype=dtype)
+        p["attn_out_norm"] = {"scale": jnp.ones((cfg.d_model,), dtype)}
+        p["ssm_out_norm"] = {"scale": jnp.ones((cfg.d_model,), dtype)}
+    return p
+
+
+def _init_cross_layer(cfg: ArchConfig, key, dtype):
+    """Decoder layer of an enc-dec model: self-attn + cross-attn + mlp."""
+    ks = split_keys(key, 3)
+    return {"ln1": _init_norm(cfg, dtype),
+            "attn": _init_attn(cfg, ks[0], dtype),
+            "ln_x": _init_norm(cfg, dtype),
+            "xattn": _init_attn(cfg, ks[1], dtype),
+            "ln2": _init_norm(cfg, dtype),
+            "mlp": _init_mlp(cfg, ks[2], dtype)}
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> dict:
+    ks = split_keys(key, 6)
+    p = {
+        "embed": dense_init(ks[0], (cfg.vocab, cfg.d_model),
+                            scale=0.02, dtype=dtype),
+        "lm_head": dense_init(ks[1], (cfg.vocab, cfg.d_model),
+                              scale=0.02, dtype=dtype),
+        "ln_f": _init_norm(cfg, dtype),
+    }
+    if cfg.family == "encdec":
+        enc_cfg = dataclasses.replace(cfg, family="dense",
+                                      n_layers=cfg.n_enc_layers)
+        enc_keys = jnp.stack(split_keys(ks[2], cfg.n_enc_layers))
+        p["enc_layers"] = jax.vmap(
+            lambda k: _init_layer(enc_cfg, k, dtype))(enc_keys)
+        p["enc_ln_f"] = _init_norm(cfg, dtype)
+        dec_keys = jnp.stack(split_keys(ks[3], cfg.n_layers))
+        p["layers"] = jax.vmap(
+            lambda k: _init_cross_layer(cfg, k, dtype))(dec_keys)
+    else:
+        layer_keys = jnp.stack(split_keys(ks[3], cfg.n_layers))
+        p["layers"] = jax.vmap(
+            lambda k: _init_layer(cfg, k, dtype))(layer_keys)
+    return p
+
+
+# --------------------------------------------------------------------------
+# attention sub-block (full sequence)
+# --------------------------------------------------------------------------
+
+def _qkv(cfg: ArchConfig, ap: dict, x: jax.Array):
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = jnp.einsum("bsd,dk->bsk", x, ap["wq"])
+    k = jnp.einsum("bsd,dk->bsk", x, ap["wk"])
+    v = jnp.einsum("bsd,dk->bsk", x, ap["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + ap["bq"], k + ap["bk"], v + ap["bv"]
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, ap["q_norm"])
+        k = rmsnorm(k, ap["k_norm"])
+    return q, k, v
+
+
+def _attn_block(cfg: ArchConfig, ap: dict, x: jax.Array,
+                positions: jax.Array, *, causal: bool, attn_impl: str,
+                q_offset: int = 0,
+                shard_fn=None) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (out, k, v) — k/v pre-repeat, post-rope, for cache storage."""
+    q, k, v = _qkv(cfg, ap, x)
+    if cfg.rope_fraction > 0:
+        q = apply_rope(q, positions, cfg.rope_fraction, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_fraction, cfg.rope_theta)
+    if attn_impl == "chunked":
+        o = chunked_attention(q, k, v, causal=causal, q_offset=q_offset,
+                              window=cfg.window)
+    else:
+        o = dense_attention(q, k, v, causal=causal, window=cfg.window,
+                            shard_fn=shard_fn)
+    b, s = x.shape[:2]
+    out = jnp.einsum("bsk,kd->bsd", o.reshape(b, s, -1), ap["wo"])
+    return out, k, v
+
+
+# --------------------------------------------------------------------------
+# full-sequence forward (training / prefill)
+# --------------------------------------------------------------------------
+
+def forward(cfg: ArchConfig, params: dict, tokens: jax.Array, *,
+            attn_impl: str = "dense",
+            shard_fn: Optional[Callable] = None,
+            remat: bool = False,
+            enc_inputs: Optional[jax.Array] = None,
+            collect_cache: bool = False,
+            last_only: bool = False,
+            max_seq: int = 0) -> tuple[jax.Array, Optional[dict]]:
+    """Token logits for a full sequence.  ``collect_cache`` additionally
+    returns a serving cache of size ``max_seq`` (prefill path).
+    ``last_only`` computes logits for the final position only (prefill
+    never materializes the (B, S, V) logits tensor).
+    """
+    sh = shard_fn or (lambda x, kind: x)
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(params["embed"].dtype)
+    x = sh(x, "act")
+    positions = jnp.arange(s)[None, :]
+
+    if cfg.family == "encdec":
+        enc_out = _encoder(cfg, params, enc_inputs, attn_impl, sh, remat)
+        return _decoder_encdec(cfg, params, x, positions, enc_out,
+                               attn_impl, sh, collect_cache, max_seq,
+                               last_only, remat)
+
+    spec = cfg.ssm_spec if cfg.family in ("ssm", "hybrid") else None
+
+    def layer(x, lp):
+        h = apply_norm(x, lp["ln1"], cfg.norm)
+        if cfg.family == "ssm":
+            mix, st = ssd_chunked(lp["ssm"], spec, h)
+        elif cfg.family == "hybrid":
+            a_out, k, v = _attn_block(cfg, lp["attn"], h, positions,
+                                      causal=True, attn_impl=attn_impl,
+                                      shard_fn=sh)
+            s_out, st = ssd_chunked(lp["ssm"], spec, h)
+            mix = 0.5 * (rmsnorm(a_out, lp["attn_out_norm"]["scale"])
+                         + rmsnorm(s_out, lp["ssm_out_norm"]["scale"]))
+        else:
+            mix, k, v = _attn_block(cfg, lp["attn"], h, positions,
+                                    causal=True, attn_impl=attn_impl,
+                                    shard_fn=sh)
+            st = None
+        x = sh(x + mix, "act")
+        h2 = apply_norm(x, lp["ln2"], cfg.norm)
+        if cfg.family == "moe":
+            ff = moe_forward(h2, lp["moe"], cfg.top_k, cfg.capacity_factor,
+                             shard_fn=sh)
+        elif cfg.family == "ssm":
+            ff = 0.0
+        else:
+            ff = swiglu(h2, lp["mlp"]) if cfg.act == "swiglu" \
+                else gelu_mlp(h2, lp["mlp"])
+        x = sh(x + ff, "act") if cfg.family != "ssm" else x
+        extras = {}
+        if collect_cache:
+            if cfg.family not in ("ssm",):
+                extras["k"] = sh(k, "kv_stack")
+                extras["v"] = sh(v, "kv_stack")
+            if st is not None:
+                extras["ssm"], extras["conv"] = st.ssm, st.conv
+        return x, extras
+
+    def scan_body(x, lp):
+        f = jax.checkpoint(layer) if remat else layer
+        return f(x, lp)
+
+    x, extras = jax.lax.scan(scan_body, x, params["layers"])
+    x = apply_norm(x, params["ln_f"], cfg.norm)
+    if last_only:
+        x = x[:, -1:]
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"])
+    logits = sh(logits, "logits")
+
+    cache = None
+    if collect_cache:
+        cache = _build_cache(cfg, extras, b, s, max_seq or s)
+    return logits, cache
+
+
+def _build_cache(cfg: ArchConfig, extras: dict, b: int, s: int,
+                 max_seq: int) -> dict:
+    cache = {"len": jnp.full((b,), s, jnp.int32)}
+    if "k" in extras:
+        k, v = extras["k"], extras["v"]              # (L,B,S,Hkv,hd)
+        if cfg.window > 0:
+            w = cfg.window
+            kc = jnp.zeros((k.shape[0], b, w, cfg.n_kv_heads, cfg.hd),
+                           k.dtype)
+            vc = jnp.zeros_like(kc)
+            # write the trailing `window` positions into ring slots
+            pos = jnp.arange(max(s - w, 0), s)
+            slot = pos % w
+            kc = kc.at[:, :, slot].set(k[:, :, pos])
+            vc = vc.at[:, :, slot].set(v[:, :, pos])
+            cache["k"], cache["v"] = kc, vc
+        else:
+            pad = max_seq - s
+            cache["k"] = jnp.pad(k, ((0, 0), (0, 0), (0, pad),
+                                     (0, 0), (0, 0)))
+            cache["v"] = jnp.pad(v, ((0, 0), (0, 0), (0, pad),
+                                     (0, 0), (0, 0)))
+    if "ssm" in extras:
+        cache["ssm"], cache["conv"] = extras["ssm"], extras["conv"]
+    return cache
+
+
+# --------------------------------------------------------------------------
+# encoder-decoder (whisper-style; frontend = stub embeddings)
+# --------------------------------------------------------------------------
+
+def _encoder(cfg: ArchConfig, params: dict, enc_inputs: jax.Array,
+             attn_impl: str, sh, remat: bool = False) -> jax.Array:
+    x = enc_inputs + sinusoidal_positions(
+        enc_inputs.shape[1], cfg.d_model, enc_inputs.dtype)[None]
+    x = sh(x, "act")
+    positions = jnp.arange(enc_inputs.shape[1])[None, :]
+    enc_cfg = dataclasses.replace(cfg, family="dense", rope_fraction=0.0)
+
+    def layer(x, lp):
+        h = apply_norm(x, lp["ln1"], cfg.norm)
+        mix, _, _ = _attn_block(enc_cfg, lp["attn"], h, positions,
+                                causal=False, attn_impl=attn_impl)
+        x = sh(x + mix, "act")
+        h2 = apply_norm(x, lp["ln2"], cfg.norm)
+        ff = gelu_mlp(h2, lp["mlp"]) if cfg.act == "gelu" \
+            else swiglu(h2, lp["mlp"])
+        return sh(x + ff, "act"), None
+
+    body = jax.checkpoint(layer) if remat else layer
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return apply_norm(x, params["enc_ln_f"], cfg.norm)
+
+
+def _decoder_encdec(cfg: ArchConfig, params: dict, x: jax.Array,
+                    positions: jax.Array, enc_out: jax.Array,
+                    attn_impl: str, sh, collect_cache: bool, max_seq: int,
+                    last_only: bool = False, remat: bool = False):
+    b, s = x.shape[:2]
+    x = x + sinusoidal_positions(s, cfg.d_model, x.dtype)[None]
+    dec_cfg = dataclasses.replace(cfg, rope_fraction=0.0)
+
+    def layer(x, lp):
+        h = apply_norm(x, lp["ln1"], cfg.norm)
+        mix, k, v = _attn_block(dec_cfg, lp["attn"], h, positions,
+                                causal=True, attn_impl=attn_impl)
+        x = sh(x + mix, "act")
+        # cross attention over encoder output
+        hx = apply_norm(x, lp["ln_x"], cfg.norm)
+        qx, kx, vx = _qkv(dec_cfg, lp["xattn"], hx)
+        # queries from decoder, keys/values from encoder states
+        kx_e = jnp.einsum("bsd,dk->bsk", enc_out, lp["xattn"]["wk"])
+        vx_e = jnp.einsum("bsd,dk->bsk", enc_out, lp["xattn"]["wv"])
+        if cfg.qkv_bias:
+            kx_e, vx_e = kx_e + lp["xattn"]["bk"], vx_e + lp["xattn"]["bv"]
+        kx_e = kx_e.reshape(b, enc_out.shape[1], cfg.n_kv_heads, cfg.hd)
+        vx_e = vx_e.reshape(b, enc_out.shape[1], cfg.n_kv_heads, cfg.hd)
+        if attn_impl == "chunked":
+            xo = chunked_attention(qx, kx_e, vx_e, causal=False)
+        else:
+            xo = dense_attention(qx, kx_e, vx_e, causal=False)
+        x = sh(x + jnp.einsum(
+            "bsk,kd->bsd", xo.reshape(b, s, -1), lp["xattn"]["wo"]), "act")
+        h2 = apply_norm(x, lp["ln2"], cfg.norm)
+        ff = gelu_mlp(h2, lp["mlp"]) if cfg.act == "gelu" \
+            else swiglu(h2, lp["mlp"])
+        x = sh(x + ff, "act")
+        extras = {}
+        if collect_cache:
+            extras["k"] = sh(k, "kv_stack")
+            extras["v"] = sh(v, "kv_stack")
+            extras["cross_k"] = sh(kx_e, "kv_stack")
+            extras["cross_v"] = sh(vx_e, "kv_stack")
+        return x, extras
+
+    body = jax.checkpoint(layer) if remat else layer
+    x, extras = jax.lax.scan(body, x, params["layers"])
+    x = apply_norm(x, params["ln_f"], cfg.norm)
+    if last_only:
+        x = x[:, -1:]
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"])
+    logits = sh(logits, "logits")
+    cache = None
+    if collect_cache:
+        cache = _build_cache(cfg, {"k": extras["k"], "v": extras["v"]},
+                             b, s, max_seq or s)
+        cache["cross_k"], cache["cross_v"] = extras["cross_k"], extras["cross_v"]
+    return logits, cache
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + single-token decode
+# --------------------------------------------------------------------------
+
+def prefill(cfg: ArchConfig, params: dict, tokens: jax.Array, max_seq: int,
+            *, attn_impl: str = "dense",
+            shard_fn: Optional[Callable] = None,
+            enc_inputs: Optional[jax.Array] = None):
+    """Full-prompt prefill.  Returns (last-position logits, serving cache)."""
+    logits, cache = forward(cfg, params, tokens, attn_impl=attn_impl,
+                            shard_fn=shard_fn, enc_inputs=enc_inputs,
+                            collect_cache=True, last_only=True,
+                            max_seq=max_seq)
+    return logits[:, -1], cache
+
+
+def decode_step(cfg: ArchConfig, params: dict, cache: dict,
+                tokens: jax.Array, *,
+                shard_fn: Optional[Callable] = None):
+    """One decode step.  tokens: (B,) int32.  Returns (logits, new cache)."""
+    sh = shard_fn or (lambda x, kind: x)
+    b = tokens.shape[0]
+    x = params["embed"][tokens][:, None, :].astype(params["embed"].dtype)
+    x = sh(x, "act_decode")
+    lens = cache["len"]
+    positions = lens[:, None]
+    spec = cfg.ssm_spec if cfg.family in ("ssm", "hybrid") else None
+    is_encdec = cfg.family == "encdec"
+    if is_encdec:
+        # sinusoidal position embedding gathered at each request's length
+        pe = sinusoidal_positions(cache["k"].shape[2], cfg.d_model, x.dtype)
+        x = x + pe[lens][:, None, :]
+
+    # The mutable cache rides in the scan CARRY and is updated per layer
+    # with dynamic-update-slice — XLA keeps while-loop carries in place, so
+    # with donation the decode step allocates no second cache (scan xs->ys
+    # would double-buffer the full (L, B, S, ...) arrays).
+    CARRY_KEYS = tuple(k for k in ("k", "v", "ssm", "conv") if k in cache)
+
+    def layer(carry, xs):
+        x, cstate = carry
+        lp, li = xs["p"], xs["i"]
+        h = apply_norm(x, lp["ln1"], cfg.norm)
+        new = {}
+
+        def get(key):
+            return jax.lax.dynamic_index_in_dim(cstate[key], li, axis=0,
+                                                keepdims=False)
+
+        if cfg.family == "ssm":
+            mix, st = ssd_decode_step(
+                lp["ssm"], spec, h, SSMState(get("ssm"), get("conv")))
+            new["ssm"], new["conv"] = st.ssm, st.conv
+        else:
+            dec_cfg = dataclasses.replace(cfg, rope_fraction=0.0) \
+                if is_encdec else cfg
+            q, k, v = _qkv(dec_cfg, lp["attn"], h)
+            if dec_cfg.rope_fraction > 0:
+                q = apply_rope(q, positions, cfg.rope_fraction, cfg.rope_theta)
+                k = apply_rope(k, positions, cfg.rope_fraction, cfg.rope_theta)
+            if cfg.window > 0:
+                kc, vc = kvcache.update_ring_cache(
+                    get("k"), get("v"), k, v, lens, cfg.window)
+                eff_len = jnp.minimum(lens + 1, cfg.window)
+                o = decode_attention(q, kc, vc, eff_len, shard_fn=sh)
+            else:
+                kc, vc = kvcache.update_layer_cache(get("k"), get("v"),
+                                                    k, v, lens)
+                o = decode_attention(q, kc, vc, lens + 1, shard_fn=sh)
+            new["k"], new["v"] = kc, vc
+            a_out = jnp.einsum("bsk,kd->bsd", o.reshape(b, 1, -1),
+                               lp["attn"]["wo"])
+            if cfg.family == "hybrid":
+                s_out, st = ssd_decode_step(
+                    lp["ssm"], spec, h, SSMState(get("ssm"), get("conv")))
+                new["ssm"], new["conv"] = st.ssm, st.conv
+                mix = 0.5 * (rmsnorm(a_out, lp["attn_out_norm"]["scale"])
+                             + rmsnorm(s_out, lp["ssm_out_norm"]["scale"]))
+            else:
+                mix = a_out
+        x = x + mix
+        if is_encdec:
+            hx = apply_norm(x, lp["ln_x"], cfg.norm)
+            dec_cfg = dataclasses.replace(cfg, rope_fraction=0.0)
+            qx, _, _ = _qkv(dec_cfg, lp["xattn"], hx)
+            enc_len = jnp.full((b,), xs["cross_k"].shape[1], jnp.int32)
+            xo = decode_attention(qx, xs["cross_k"], xs["cross_v"], enc_len,
+                                  shard_fn=sh)
+            x = x + jnp.einsum("bsk,kd->bsd", xo.reshape(b, 1, -1),
+                               lp["xattn"]["wo"])
+        h2 = apply_norm(x, lp["ln2"], cfg.norm)
+        if cfg.family == "moe":
+            ff = moe_forward(h2, lp["moe"], cfg.top_k, cfg.capacity_factor,
+                             shard_fn=sh)
+        elif cfg.family == "ssm":
+            ff = 0.0
+        else:
+            ff = swiglu(h2, lp["mlp"]) if cfg.act == "swiglu" \
+                else gelu_mlp(h2, lp["mlp"])
+        x = x + ff if cfg.family != "ssm" else x
+        cstate = {key: jax.lax.dynamic_update_index_in_dim(
+                      cstate[key], new[key].astype(cstate[key].dtype), li, 0)
+                  for key in CARRY_KEYS} if CARRY_KEYS else cstate
+        return (x, cstate), None
+
+    xs = {"p": params["layers"],
+          "i": jnp.arange(cfg.n_layers, dtype=jnp.int32)}
+    for key in ("cross_k", "cross_v"):
+        if key in cache:
+            xs[key] = cache[key]
+    cstate0 = {key: cache[key] for key in CARRY_KEYS}
+    (x, cstate), _ = jax.lax.scan(layer, (x, cstate0), xs)
+    x = apply_norm(x, params["ln_f"], cfg.norm)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"])[:, 0]
+    logits = sh(logits, "logits_decode")
+
+    new_cache = dict(cache)
+    new_cache.update(cstate)
+    new_cache["len"] = lens + 1
+    return logits, new_cache

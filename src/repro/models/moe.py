@@ -1,0 +1,141 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-based dispatch.
+
+Implementation strategy (TPU/SPMD-friendly, DESIGN.md §5):
+
+* router -> top-k expert ids + normalized gates per token;
+* *per-row capacity dispatch*: tokens are scattered into a
+  ``(B, E, C, d)`` buffer with C = ceil(k·S/E·cf) PER BATCH ROW.  Keeping
+  the batch dimension leading means the scatter stays local to the
+  data-parallel shard (no data-dependent cross-shard writes); the EP
+  all-to-all appears exactly once, as the resharding of the dispatch
+  buffer from batch-sharded to expert-sharded (``shard_fn`` hook
+  "moe_dispatch") before the expert einsum — mirroring the dispatch/
+  combine collectives of a real MoE system;
+* overflow tokens beyond C are dropped (capacity-factor approximation of
+  the dropless reference, cf = 1.25 default; smoke configs use cf = E/k
+  which is provably dropless);
+* experts run as one einsum batched over the expert axis — sharded over
+  "model" when E divides the axis (EP), otherwise the expert-internal ffn
+  dim is sharded ("TP-within-expert", e.g. qwen2-moe's 60 experts on a
+  16-way axis).
+
+Shared experts (Qwen2-MoE) run densely on every token.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, split_keys
+
+
+def init_moe(key, d_model: int, d_expert: int, n_experts: int,
+             n_shared: int, dtype=jnp.float32) -> dict:
+    ks = split_keys(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d_model, n_experts), dtype=dtype),
+        "w_gate": dense_init(ks[1], (n_experts, d_model, d_expert), dtype=dtype),
+        "w_up": dense_init(ks[2], (n_experts, d_model, d_expert), dtype=dtype),
+        "w_down": dense_init(ks[3], (n_experts, d_expert, d_model), dtype=dtype),
+    }
+    if n_shared:
+        sk = split_keys(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(sk[0], (d_model, n_shared * d_expert), dtype=dtype),
+            "w_up": dense_init(sk[1], (d_model, n_shared * d_expert), dtype=dtype),
+            "w_down": dense_init(sk[2], (n_shared * d_expert, d_model), dtype=dtype),
+        }
+    return p
+
+
+def moe_forward(x: jax.Array, p: dict, top_k: int,
+                capacity_factor: float = 1.25,
+                shard_fn: Optional[Callable] = None,
+                router_dtype=jnp.float32) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d)."""
+    sh = shard_fn or (lambda a, kind: a)
+    B, S, d = x.shape
+    E = p["router"].shape[1]
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(router_dtype),
+                        p["router"].astype(router_dtype))
+    gates, idx = jax.lax.top_k(logits, top_k)               # (B, S, k)
+    gates = jax.nn.softmax(gates, axis=-1)
+
+    cap = max(int(math.ceil(top_k * S / E * capacity_factor)), 1)
+    # position-in-expert: sort-free cumsum per row.  All indexing below is
+    # vmapped over the batch row — vmapped scatters/gathers lower to
+    # BATCHED scatter/gather ops, which the SPMD partitioner keeps local
+    # to the data shard (explicit-batch-index scatters get replicated!).
+    e_flat = idx.reshape(B, S * top_k)                      # (B, S*k)
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)     # (B, S*k, E)
+    pos = jnp.cumsum(onehot, axis=1) - 1
+    pos_in_e = jnp.take_along_axis(
+        pos, e_flat[..., None], axis=2)[..., 0]             # (B, S*k)
+    keep = pos_in_e < cap
+    safe_pos = jnp.where(keep, pos_in_e, cap - 1)
+
+    x_rep = jnp.repeat(x[:, :, None, :], top_k, axis=2
+                       ).reshape(B, S * top_k, d)
+    contrib = jnp.where(keep[..., None], x_rep, 0)
+
+    def _dispatch_row(c_row, e_row, p_row):
+        return jnp.zeros((E, cap, d), c_row.dtype).at[e_row, p_row].add(
+            c_row, mode="drop")
+
+    buf = jax.vmap(_dispatch_row)(contrib, e_flat, safe_pos)
+    buf = sh(buf, "moe_dispatch")          # <- EP all-to-all happens here
+
+    # expert FFN batched over the expert axis
+    g = jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    y_e = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(x.dtype))
+    y_e = sh(y_e, "moe_combine")           # <- and back to batch-sharded
+
+    # gather + gate combine (vmapped row gather, batch-local)
+    def _combine_row(y_row, e_row, p_row):
+        return y_row[e_row, p_row]
+
+    y_tok = jax.vmap(_combine_row)(y_e, e_flat, safe_pos)   # (B, S*k, d)
+    y_tok = jnp.where(keep[..., None], y_tok, 0)
+    y = (y_tok.reshape(B, S, top_k, d)
+         * gates[..., None].astype(x.dtype)).sum(axis=2)
+
+    if "shared" in p:
+        sp = p["shared"]
+        sg = jnp.einsum("bsd,df->bsf", x, sp["w_gate"].astype(x.dtype))
+        su = jnp.einsum("bsd,df->bsf", x, sp["w_up"].astype(x.dtype))
+        y = y + jnp.einsum("bsf,fd->bsd", jax.nn.silu(sg) * su,
+                           sp["w_down"].astype(x.dtype))
+    return y
+
+
+def moe_ref(x: jax.Array, p: dict, top_k: int) -> jax.Array:
+    """Dropless dense reference: every expert on every token, masked combine.
+    O(E) compute — only for tiny test configs."""
+    orig = x.shape
+    d = orig[-1]
+    xt = x.reshape(-1, d)
+    logits = xt.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    gates, idx = jax.lax.top_k(logits, top_k)
+    gates = jax.nn.softmax(gates, axis=-1)
+    g = jnp.einsum("td,edf->tef", xt, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("td,edf->tef", xt, p["w_up"].astype(x.dtype))
+    y_all = jnp.einsum("tef,efd->ted", jax.nn.silu(g) * u,
+                       p["w_down"].astype(x.dtype))          # (T, E, d)
+    E = y_all.shape[1]
+    comb = jnp.zeros((xt.shape[0], E), jnp.float32)
+    comb = comb.at[jnp.arange(xt.shape[0])[:, None], idx].add(gates)
+    y = jnp.einsum("ted,te->td", y_all.astype(jnp.float32), comb)
+    out = y.astype(x.dtype).reshape(orig)
+    if "shared" in p:
+        sp = p["shared"]
+        sg = xt @ sp["w_gate"].astype(x.dtype)
+        su = xt @ sp["w_up"].astype(x.dtype)
+        out = out + ((jax.nn.silu(sg) * su) @ sp["w_down"].astype(x.dtype)
+                     ).reshape(orig)
+    return out

@@ -1,0 +1,205 @@
+"""Mamba2 (state-space duality / SSD) block, pure JAX.
+
+Follows arXiv:2405.21060: per head h with scalar decay a_h = -exp(A_log_h),
+inputs x (B,S,H,P), gates dt (B,S,H), shared B/C projections (B,S,G,N)
+(G groups = 1 here).  Two execution modes:
+
+* ``ssd_chunked`` — training / prefill: sequence split into chunks of Q;
+  intra-chunk term is a (masked, decay-weighted) quadratic attention-like
+  product, inter-chunk term propagates the (H, P, N) state with a
+  lax.scan over chunks — O(S·Q) work, O(S/Q) sequential depth.
+* ``ssd_decode_step`` — serving: constant-time recurrent update of the
+  (B, H, P, N) state; this is why mamba2 runs the 500k-token decode shape
+  that full-attention models cannot (DESIGN.md §4).
+
+A depthwise causal conv (width 4) precedes the SSM; its rolling state is
+carried for decode.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rmsnorm, split_keys
+
+
+class SSMSpec(NamedTuple):
+    d_model: int
+    d_inner: int          # = expand * d_model (expand=2)
+    head_dim: int         # P
+    n_heads: int          # H = d_inner // P
+    d_state: int          # N
+    conv_width: int = 4
+    chunk: int = 256
+
+
+def spec_for(d_model: int, d_state: int, head_dim: int = 64,
+             expand: int = 2, chunk: int = 256) -> SSMSpec:
+    d_inner = expand * d_model
+    return SSMSpec(d_model, d_inner, head_dim, d_inner // head_dim,
+                   d_state, 4, chunk)
+
+
+def init_ssm(key, spec: SSMSpec, dtype=jnp.float32) -> dict:
+    ks = split_keys(key, 6)
+    di, H, N = spec.d_inner, spec.n_heads, spec.d_state
+    conv_ch = di + 2 * N          # x, B, C all pass through the conv
+    return {
+        # in_proj -> [z (di), x (di), B (N), C (N), dt (H)]
+        "w_in": dense_init(ks[0], (spec.d_model, 2 * di + 2 * N + H),
+                           dtype=dtype),
+        "conv_w": dense_init(ks[1], (spec.conv_width, conv_ch),
+                             scale=1.0 / math.sqrt(spec.conv_width),
+                             dtype=dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype=dtype),
+        "A_log": jnp.zeros((H,), dtype=jnp.float32),
+        "D": jnp.ones((H,), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((H,), dtype=jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype=dtype),
+        "w_out": dense_init(ks[2], (di, spec.d_model), dtype=dtype),
+    }
+
+
+class SSMState(NamedTuple):
+    ssm: jax.Array        # (B, H, P, N) running state
+    conv: jax.Array       # (B, conv_width-1, conv_ch) rolling conv inputs
+
+
+def init_state(spec: SSMSpec, batch: int, dtype=jnp.float32) -> SSMState:
+    conv_ch = spec.d_inner + 2 * spec.d_state
+    return SSMState(
+        ssm=jnp.zeros((batch, spec.n_heads, spec.head_dim, spec.d_state),
+                      dtype=jnp.float32),
+        conv=jnp.zeros((batch, spec.conv_width - 1, conv_ch), dtype=dtype))
+
+
+def _split_proj(h: jax.Array, spec: SSMSpec):
+    di, N, H = spec.d_inner, spec.d_state, spec.n_heads
+    z = h[..., :di]
+    xBC = h[..., di:di + di + 2 * N]
+    dt = h[..., di + di + 2 * N:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: jax.Array):
+    """Depthwise causal conv along seq. xBC: (B,S,C); prev: (B,W-1,C)."""
+    W = w.shape[0]
+    xp = jnp.concatenate([prev.astype(xBC.dtype), xBC], axis=1)
+    out = sum(xp[:, i:i + xBC.shape[1], :] * w[i] for i in range(W))
+    new_prev = xp[:, -(W - 1):, :] if W > 1 else prev
+    return jax.nn.silu(out + b), new_prev
+
+
+def _segsum_decay(log_a: jax.Array) -> jax.Array:
+    """L[i,j] = exp(sum_{j<t<=i} log_a_t) for j<=i else 0 — (…,Q,Q)."""
+    Q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # (…,Q,Q)
+    mask = jnp.tril(jnp.ones((Q, Q), dtype=bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(params: dict, spec: SSMSpec, u: jax.Array,
+                state: SSMState | None = None,
+                ) -> tuple[jax.Array, SSMState]:
+    """Full-sequence SSD. u: (B, S, d_model) -> (B, S, d_model)."""
+    B_, S, _ = u.shape
+    H, P, N, Q = spec.n_heads, spec.head_dim, spec.d_state, spec.chunk
+    h = u @ params["w_in"].astype(u.dtype)
+    z, xBC, dt = _split_proj(h, spec)
+    if state is None:
+        state = init_state(spec, B_, dtype=u.dtype)
+    xBC, conv_state = _causal_conv(xBC, params["conv_w"].astype(u.dtype),
+                                   params["conv_b"].astype(u.dtype),
+                                   state.conv)
+    x = xBC[..., :spec.d_inner].reshape(B_, S, H, P)
+    Bm = xBC[..., spec.d_inner:spec.d_inner + N]          # (B,S,N) G=1
+    Cm = xBC[..., spec.d_inner + N:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"])             # (B,S,H)
+    a = -jnp.exp(params["A_log"])                         # (H,)
+    log_a = (dt * a).transpose(0, 2, 1)                   # (B,H,S) negative
+
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, 0), (0, pad)))
+    nC = (S + pad) // Q
+
+    xc = x.reshape(B_, nC, Q, H, P)
+    Bc = Bm.reshape(B_, nC, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(B_, nC, Q, N).astype(jnp.float32)
+    dtc = dt.reshape(B_, nC, Q, H)
+    lac = log_a.reshape(B_, H, nC, Q)
+
+    # --- intra-chunk (quadratic within Q) ------------------------------
+    L = _segsum_decay(lac)                                # (B,H,nC,Q,Q)
+    xdt = (xc.astype(jnp.float32)
+           * dtc[..., None])                              # (B,nC,Q,H,P)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)        # (B,nC,Q,Q)
+    y_intra = jnp.einsum("bhcqk,bcqk,bckhp->bcqhp",
+                         L, scores, xdt)
+
+    # --- chunk states + inter-chunk scan --------------------------------
+    cum = jnp.cumsum(lac, axis=-1)                        # (B,H,nC,Q)
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)           # (B,H,nC,Q)
+    chunk_state = jnp.einsum("bckn,bhck,bckhp->bchpn",
+                             Bc, decay_to_end, xdt)       # (B,nC,H,P,N)
+    chunk_decay = jnp.exp(cum[..., -1])                   # (B,H,nC)
+
+    def scan_body(s, inp):
+        cs, cd = inp                                      # (B,H,P,N),(B,H)
+        s_out = s                                         # state BEFORE chunk
+        s_new = s * cd[..., None, None] + cs
+        return s_new, s_out
+
+    cs_t = chunk_state.transpose(1, 0, 2, 3, 4)           # (nC,B,H,P,N)
+    cd_t = chunk_decay.transpose(2, 0, 1)                 # (nC,B,H)
+    final_state, states_before = jax.lax.scan(
+        scan_body, state.ssm, (cs_t, cd_t))
+    states_before = states_before.transpose(1, 0, 2, 3, 4)  # (B,nC,H,P,N)
+
+    decay_from_start = jnp.exp(cum)                       # (B,H,nC,Q)
+    y_inter = jnp.einsum("bcqn,bhcq,bchpn->bcqhp",
+                         Cc, decay_from_start, states_before)
+
+    y = (y_intra + y_inter).reshape(B_, nC * Q, H, P)[:, :S]
+    y = y + x[:, :S].astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(B_, S, spec.d_inner).astype(u.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_scale"])
+    out = y @ params["w_out"].astype(u.dtype)
+    return out, SSMState(ssm=final_state, conv=conv_state)
+
+
+def ssd_decode_step(params: dict, spec: SSMSpec, u: jax.Array,
+                    state: SSMState) -> tuple[jax.Array, SSMState]:
+    """One token. u: (B, 1, d_model)."""
+    B_ = u.shape[0]
+    H, P, N = spec.n_heads, spec.head_dim, spec.d_state
+    h = u @ params["w_in"].astype(u.dtype)
+    z, xBC, dt = _split_proj(h, spec)
+    xBC, conv_state = _causal_conv(xBC, params["conv_w"].astype(u.dtype),
+                                   params["conv_b"].astype(u.dtype),
+                                   state.conv)
+    x = xBC[..., :spec.d_inner].reshape(B_, H, P)
+    Bm = xBC[:, 0, spec.d_inner:spec.d_inner + N].astype(jnp.float32)
+    Cm = xBC[:, 0, spec.d_inner + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * a)                               # (B,H)
+    xdt = x.astype(jnp.float32) * dt[..., None]           # (B,H,P)
+    new_state = (state.ssm * decay[..., None, None]
+                 + jnp.einsum("bhp,bn->bhpn", xdt, Bm))
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cm)
+    y = y + x.astype(jnp.float32) * params["D"][None, :, None]
+    y = y.reshape(B_, 1, spec.d_inner).astype(u.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_scale"])
+    return y @ params["w_out"].astype(u.dtype), SSMState(new_state, conv_state)

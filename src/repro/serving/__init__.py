@@ -1,0 +1,8 @@
+"""Real serving runtime: paged KV pool, jitted model exec, continuous-
+batching engine, GoRouting service controller with fault tolerance."""
+from .kv_pool import PagedKVPool
+from .engine import Engine, EngineStats
+from .service import ServiceController, ServiceConfig
+
+__all__ = ["PagedKVPool", "Engine", "EngineStats", "ServiceController",
+           "ServiceConfig"]

@@ -1,0 +1,224 @@
+"""Real serving engine: continuous batching over an actual JAX model.
+
+One ``Engine`` = one model replica.  Each iteration:
+
+  1. the configured policy (SlideBatching or a baseline — the SAME code
+     that drives the simulator) forms a batch against the shared
+     BlockManager accounting;
+  2. reload/eviction directives are applied to the PagedKVPool (host
+     mirrors, drops, restores);
+  3. decode entries run as one ``decode_batch`` call; prefill chunks run
+     per request (``prefill_chunk``), greedy-sampling the first token when
+     a prompt completes;
+  4. measured wall-clock batch latencies feed the §4.1 estimator, which is
+     refit online every ``refit_every`` batches (the offline-profiling
+     bootstrap happens in ``calibrate``).
+
+The engine clock can be virtual (``clock=manual``) for deterministic tests.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.batching import BatchPlan, EngineConfig, SchedView, compute_remaining
+from ..core.blocks import BlockManager, blocks_for
+from ..core.estimator import BatchLatencyEstimator
+from ..core.request import Phase, Request
+from ..models.model import ArchConfig, init_params
+from . import model_exec
+from .kv_pool import PagedKVPool
+
+
+@dataclass
+class EngineStats:
+    iterations: int = 0
+    tokens_out: int = 0
+    prefill_tokens: int = 0
+    evictions: int = 0
+    reload_blocks: int = 0
+    batch_latencies: list = field(default_factory=list)
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, params, eng_cfg: EngineConfig,
+                 policy, *, num_blocks: int = 512, block_size: int = 16,
+                 t_block: float = 5e-4, max_ctx: int = 1024,
+                 est: Optional[BatchLatencyEstimator] = None,
+                 bm_kwargs: Optional[dict] = None, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.eng_cfg = eng_cfg
+        self.policy = policy
+        self.max_ctx = max_ctx
+        self.pool = PagedKVPool(cfg, num_blocks, block_size)
+        self.bm = BlockManager(num_blocks - 1, block_size, t_block,
+                               **(bm_kwargs or {}))
+        self.est = est or BatchLatencyEstimator(
+            a_p=1e-8, b_p=1e-8, c_p=1e-5, a_d=1e-8, b_d=1e-4, t_c=1e-3)
+        self.queue: list[Request] = []
+        self.now = 0.0
+        self.stats = EngineStats()
+        self._profile: list[tuple[list, float]] = []
+        self.refit_every = 50
+        self.alive = True
+        self.outputs: dict[int, list[int]] = {}
+
+    # ------------------------------------------------------------------
+    def add_request(self, req: Request, prompt_tokens: np.ndarray,
+                    prior_outputs: Optional[list[int]] = None) -> None:
+        """``prior_outputs``: tokens already streamed to the client before a
+        failover — the engine resumes mid-generation by recomputing their
+        KV (they are ordinary known tokens) and continuing exactly."""
+        req.instance = id(self) & 0xffff
+        self.queue.append(req)
+        self.outputs[req.rid] = list(prior_outputs or [])
+        req._prompt = np.asarray(prompt_tokens, np.int32)  # type: ignore
+
+    def has_work(self) -> bool:
+        return any(r.phase != Phase.FINISHED for r in self.queue)
+
+    # ------------------------------------------------------------------
+    def _sync_pool_with_bm(self, plan: BatchPlan) -> None:
+        """Apply the §4.3 directives the policy issued on the accounting
+        layer (BlockManager) to the actual data (PagedKVPool)."""
+        for r in plan.evictions:
+            s = self.bm.state(r)
+            # mirror what survives to host, then drop device blocks
+            keep_blocks = blocks_for(s.host_tokens, self.bm.block_size)
+            if keep_blocks:
+                self.pool.offload_blocks(
+                    r.rid, list(range(keep_blocks)))
+            self.pool.drop_device_blocks(r.rid)
+            self.stats.evictions += 1
+
+    def step(self) -> Optional[dict]:
+        if not self.alive:
+            return None
+        self.bm.complete_offloads(self.now)
+        view = SchedView(self.queue, self.bm, self.est, self.eng_cfg,
+                         self.now)
+        plan = self.policy.form_batch(view)
+        if not plan.entries:
+            return None
+        t0 = time.monotonic()
+        self._sync_pool_with_bm(plan)
+
+        # reload data for requests whose plan restored host blocks
+        for e in plan.entries:
+            hb = self.pool.host_blocks(e.req.rid)
+            dev_tok = self.bm.state(e.req).dev_tokens
+            dev_blocks_needed = blocks_for(dev_tok, self.bm.block_size)
+            have = len(self.pool.tables.get(e.req.rid, []))
+            if have < dev_blocks_needed and hb:
+                n = dev_blocks_needed - have
+                self.pool.reload_blocks(e.req.rid, n)
+                self.stats.reload_blocks += n
+
+        decode_entries = [e for e in plan.entries if not e.is_prefill]
+        prefill_entries = [e for e in plan.entries if e.is_prefill]
+        emitted: list[Request] = []
+
+        # --- prefill / recompute chunks (per request) ---------------------
+        for e in prefill_entries:
+            r = e.req
+            c = model_exec.bucket(e.n_tokens)
+            ctx = e.l_kv
+            self.pool.ensure_capacity(r.rid, ctx + e.n_tokens)
+            toks = np.zeros((1, c), np.int32)
+            prompt: np.ndarray = r._prompt  # type: ignore
+            seq = np.concatenate([prompt, np.asarray(
+                self.outputs[r.rid], np.int32)])
+            toks[0, :e.n_tokens] = seq[ctx:ctx + e.n_tokens]
+            max_ctx = model_exec.bucket(ctx + c, buckets=(
+                self.max_ctx,)) if ctx + c <= self.max_ctx else ctx + c
+            maxp = max_ctx // self.pool.block_size
+            table = self.pool.table_array([r.rid], maxp=maxp)
+            logits, self.pool.kv = model_exec.prefill_chunk(
+                self.cfg, self.params, self.pool.kv, jnp.asarray(toks),
+                table, jnp.asarray([ctx], jnp.int32), max_ctx)
+            self.stats.prefill_tokens += e.n_tokens
+            done_ctx = ctx + e.n_tokens
+            target = r.prompt_len + max(0, r.generated - 1)
+            if done_ctx >= r.prompt_len and r.generated == 0:
+                tok = int(jnp.argmax(logits[0, e.n_tokens - 1]))
+                self._emit(r, tok, emitted)
+            # recompute completion emits nothing (next decode pass does)
+
+        # --- decode batch ---------------------------------------------------
+        if decode_entries:
+            rids = [e.req.rid for e in decode_entries]
+            lens = np.array([e.l_kv for e in decode_entries], np.int32)
+            for e in decode_entries:
+                self.pool.ensure_capacity(e.req.rid, e.l_kv + 1)
+            maxp = max(len(self.pool.tables[r]) for r in rids)
+            table = self.pool.table_array(rids, maxp=maxp)
+            last = np.array(
+                [self._last_token(e.req) for e in decode_entries], np.int32)
+            logits, self.pool.kv = model_exec.decode_batch(
+                self.cfg, self.params, self.pool.kv, jnp.asarray(last),
+                table, jnp.asarray(lens))
+            nxt = np.asarray(jnp.argmax(logits, -1))
+            for e, tok in zip(decode_entries, nxt):
+                self._emit(e.req, int(tok), emitted)
+
+        latency = time.monotonic() - t0
+        self.now += latency
+        self.stats.iterations += 1
+        self.stats.batch_latencies.append(latency)
+        self._profile.append((plan.work_items(), latency))
+        if len(self._profile) >= self.refit_every:
+            self._refit()
+
+        finished = [r for r in self.queue if r.phase == Phase.FINISHED]
+        for r in finished:
+            self.bm.release(r)
+            self.pool.release(r.rid)
+        self.queue = [r for r in self.queue if r.phase != Phase.FINISHED]
+        return {"emitted": emitted, "finished": finished,
+                "latency": latency, "plan": plan}
+
+    # ------------------------------------------------------------------
+    def _last_token(self, r: Request) -> int:
+        outs = self.outputs[r.rid]
+        if outs:
+            return outs[-1]
+        return int(r._prompt[-1])  # type: ignore
+
+    def _emit(self, r: Request, tok: int, emitted: list) -> None:
+        self.outputs[r.rid].append(tok)
+        r.emit_token(self.now)
+        self.stats.tokens_out += 1
+        emitted.append(r)
+
+    def _refit(self) -> None:
+        try:
+            batches = [b for b, _ in self._profile]
+            lats = [l for _, l in self._profile]
+            self.est = BatchLatencyEstimator.fit(batches, lats)
+        except Exception:
+            pass
+        self._profile = self._profile[-200:]
+
+    def run_until_drained(self, max_iters: int = 10000) -> None:
+        it = 0
+        while self.has_work() and it < max_iters:
+            if self.step() is None:
+                # idle but queued work exists only if nothing schedulable
+                break
+            it += 1
+
+    def kill(self) -> list[Request]:
+        self.alive = False
+        orphans = [r for r in self.queue if r.phase != Phase.FINISHED]
+        for r in orphans:
+            self.bm.release(r)
+            self.pool.release(r.rid)
+            r.instance = None
+        self.queue.clear()
+        return orphans

@@ -1,0 +1,95 @@
+"""Paged KV pool: the real device-side block store + host-side mirror.
+
+Layout: one device array ``(L, 2, num_blocks, block_size, Hkv, hd)``
+(k=0 / v=1), addressed through per-request block tables.  The host pool
+holds offloaded/mirrored block contents as numpy arrays keyed by
+(rid, block_index) — the §4.3 asynchronous-offload target.
+
+The pool is DATA only; residency accounting/eviction policy lives in
+core/blocks.BlockManager (shared with the simulator), keeping policy and
+mechanism separate.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import ArchConfig
+
+
+class PagedKVPool:
+    def __init__(self, cfg: ArchConfig, num_blocks: int, block_size: int,
+                 dtype=jnp.float32):
+        self.cfg = cfg
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.kv = jnp.zeros(
+            (cfg.n_layers, 2, num_blocks, block_size, cfg.n_kv_heads,
+             cfg.hd), dtype)
+        self.free: list[int] = list(range(num_blocks - 1, 0, -1))
+        # block 0 is reserved as the null page block tables pad with
+        self.tables: dict[int, list[int]] = {}
+        self.host: dict[tuple[int, int], np.ndarray] = {}
+
+    # --- allocation ------------------------------------------------------
+    def alloc(self, rid: int, n: int) -> bool:
+        if len(self.free) < n:
+            return False
+        t = self.tables.setdefault(rid, [])
+        for _ in range(n):
+            t.append(self.free.pop())
+        return True
+
+    def ensure_capacity(self, rid: int, tokens: int) -> bool:
+        """Grow rid's table to cover ``tokens`` positions."""
+        need = -(-tokens // self.block_size) - len(self.tables.get(rid, []))
+        return self.alloc(rid, need) if need > 0 else True
+
+    def release(self, rid: int) -> None:
+        for b in self.tables.pop(rid, []):
+            self.free.append(b)
+        self.host = {k: v for k, v in self.host.items() if k[0] != rid}
+
+    def table_array(self, rids: list[int], maxp: Optional[int] = None):
+        maxp = maxp or max(len(self.tables[r]) for r in rids)
+        out = np.zeros((len(rids), maxp), np.int32)
+        for i, r in enumerate(rids):
+            t = self.tables[r]
+            out[i, :len(t)] = t
+        return jnp.asarray(out)
+
+    # --- host offload / reload (§4.3 mechanism) ---------------------------
+    def offload_blocks(self, rid: int, block_indices: list[int]) -> None:
+        """Copy listed LOGICAL blocks of rid to host (async mirror)."""
+        t = self.tables[rid]
+        for bi in block_indices:
+            blk = jax.device_get(self.kv[:, :, t[bi]])
+            self.host[(rid, bi)] = np.asarray(blk)
+
+    def drop_device_blocks(self, rid: int) -> None:
+        """Free rid's device blocks (eviction); host copies survive."""
+        for b in self.tables.get(rid, []):
+            self.free.append(b)
+        self.tables[rid] = []
+
+    def reload_blocks(self, rid: int, n_blocks: int) -> int:
+        """Restore the first n host blocks of rid to fresh device blocks.
+        Returns tokens restored.  Pipelined layer-wise on TPU; on CPU the
+        copies are synchronous but accounted by the BlockManager lanes."""
+        restored = 0
+        for bi in range(n_blocks):
+            key = (rid, bi)
+            if key not in self.host:
+                break
+            if not self.alloc(rid, 1):
+                break
+            b = self.tables[rid][-1]
+            self.kv = self.kv.at[:, :, b].set(jnp.asarray(self.host[key]))
+            restored += 1
+        return restored * self.block_size
+
+    def host_blocks(self, rid: int) -> int:
+        return sum(1 for k in self.host if k[0] == rid)

@@ -1,0 +1,133 @@
+"""Jitted model execution against the paged KV pool.
+
+Two entry points, both shape-bucketed to bound recompilation:
+
+* ``decode_batch``  — one token for B requests: per layer, project QKV,
+  scatter the new K/V into each request's current block slot, run
+  paged flash-decode attention (the Pallas kernel in interpret mode on
+  CPU, native on TPU — switchable to the jnp reference).
+* ``prefill_chunk`` — a chunk of ``c`` tokens for ONE request (chunked
+  prefill, Alg. 1): stages the request's context + writes new K/V, runs
+  chunked-prefill flash attention.
+
+Only dense/GQA families are supported by the real engine demo
+(qwen1.5-0.5b smoke-scale is the example model); the simulator covers all
+families at paper scale.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.ops import chunked_prefill_attention, paged_decode_attention
+from ..models.layers import apply_norm, apply_rope, gelu_mlp, rmsnorm, swiglu
+from ..models.model import ArchConfig, _qkv
+
+
+def _mlp(cfg, lp, h):
+    if cfg.family == "moe":
+        from ..models.moe import moe_forward
+        return moe_forward(h, lp["moe"], cfg.top_k, cfg.capacity_factor)
+    return swiglu(h, lp["mlp"]) if cfg.act == "swiglu" else gelu_mlp(h, lp["mlp"])
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
+def decode_batch(cfg: ArchConfig, params, pool_kv, tokens, tables, lens):
+    """tokens: (B,) int32; tables: (B, maxp); lens: (B,) context BEFORE
+    this step.  Returns (logits (B, V), new pool)."""
+    b = tokens.shape[0]
+    bs = pool_kv.shape[3]
+    x = params["embed"][tokens][:, None, :].astype(pool_kv.dtype)
+    positions = lens[:, None]
+    block_of = tables[jnp.arange(b), lens // bs]          # (B,)
+    slot_of = lens % bs
+
+    def layer(carry, xs):
+        x, pool = carry
+        lp, li = xs["p"], xs["i"]
+        h = apply_norm(x, lp["ln1"], cfg.norm)
+        q, k, v = _qkv(cfg, lp["attn"], h)
+        if cfg.rope_fraction > 0:
+            q = apply_rope(q, positions, cfg.rope_fraction, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_fraction, cfg.rope_theta)
+        # write the new K/V into each request's current block slot
+        layer_kv = jax.lax.dynamic_index_in_dim(pool, li, 0, keepdims=False)
+        layer_kv = layer_kv.at[0, block_of, slot_of].set(k[:, 0])
+        layer_kv = layer_kv.at[1, block_of, slot_of].set(v[:, 0])
+        pool = jax.lax.dynamic_update_index_in_dim(pool, layer_kv, li, 0)
+        o = paged_decode_attention(q[:, 0], layer_kv[0], layer_kv[1],
+                                   tables, lens + 1)
+        a_out = jnp.einsum("bk,kd->bd", o.reshape(b, -1),
+                           lp["attn"]["wo"])[:, None]
+        x = x + a_out
+        h2 = apply_norm(x, lp["ln2"], cfg.norm)
+        x = x + _mlp(cfg, lp, h2)
+        return (x, pool), None
+
+    xs = {"p": params["layers"],
+          "i": jnp.arange(cfg.n_layers, dtype=jnp.int32)}
+    (x, pool_kv), _ = jax.lax.scan(layer, (x, pool_kv), xs)
+    x = apply_norm(x, params["ln_f"], cfg.norm)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"])[:, 0]
+    return logits, pool_kv
+
+
+@functools.partial(jax.jit, static_argnums=(0, 6), donate_argnums=(2,))
+def prefill_chunk(cfg: ArchConfig, params, pool_kv, tokens, table, ctx_len,
+                  max_ctx: int):
+    """One request's chunk.  tokens: (1, c) int32 (pad with 0 to the
+    bucket size); table: (1, maxp); ctx_len: (1,) tokens already cached;
+    ``max_ctx``: static staging size (>= ctx+chunk).  Returns
+    (last-position logits (1, V), new pool, valid_len)."""
+    c = tokens.shape[1]
+    bs = pool_kv.shape[3]
+    x = params["embed"][tokens].astype(pool_kv.dtype)
+    positions = ctx_len[:, None] + jnp.arange(c)[None, :]
+    maxp_stage = max_ctx // bs
+
+    def layer(carry, xs):
+        x, pool = carry
+        lp, li = xs["p"], xs["i"]
+        h = apply_norm(x, lp["ln1"], cfg.norm)
+        q, k, v = _qkv(cfg, lp["attn"], h)
+        if cfg.rope_fraction > 0:
+            q = apply_rope(q, positions, cfg.rope_fraction, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_fraction, cfg.rope_theta)
+        layer_kv = jax.lax.dynamic_index_in_dim(pool, li, 0, keepdims=False)
+        # scatter the chunk's K/V into pool blocks position by position
+        pos = ctx_len[0] + jnp.arange(c)
+        blocks = table[0, pos // bs]
+        slots = pos % bs
+        layer_kv = layer_kv.at[0, blocks, slots].set(k[0])
+        layer_kv = layer_kv.at[1, blocks, slots].set(v[0])
+        pool = jax.lax.dynamic_update_index_in_dim(pool, layer_kv, li, 0)
+        # stage the context (gather blocks) into a contiguous buffer
+        stage_blocks = table[0, :maxp_stage]
+        k_stage = layer_kv[0, stage_blocks].reshape(
+            1, max_ctx, cfg.n_kv_heads, cfg.hd)
+        v_stage = layer_kv[1, stage_blocks].reshape(
+            1, max_ctx, cfg.n_kv_heads, cfg.hd)
+        o = chunked_prefill_attention(q, k_stage, v_stage, ctx_len + c)
+        a_out = jnp.einsum("bsk,kd->bsd", o.reshape(1, c, -1),
+                           lp["attn"]["wo"])
+        x = x + a_out
+        h2 = apply_norm(x, lp["ln2"], cfg.norm)
+        x = x + _mlp(cfg, lp, h2)
+        return (x, pool), None
+
+    xs = {"p": params["layers"],
+          "i": jnp.arange(cfg.n_layers, dtype=jnp.int32)}
+    (x, pool_kv), _ = jax.lax.scan(layer, (x, pool_kv), xs)
+    x = apply_norm(x, params["ln_f"], cfg.norm)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"])
+    return logits, pool_kv
+
+
+def bucket(n: int, buckets=(16, 32, 64, 128, 256, 512, 1024, 2048)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return -(-n // buckets[-1]) * buckets[-1]

@@ -1,0 +1,141 @@
+"""Service layer: GoRouting dispatch over N real engines + fault tolerance.
+
+Production shape (DESIGN.md §5): every request is appended to a durable
+request log at admission; heartbeats mark instances dead after
+``heartbeat_timeout``; orphaned requests of a dead instance are re-dispatched
+from the log (KV lost — recomputed); instances can be added at runtime
+(elastic scale-up) and are immediately eligible for dispatch; an EWMA speed
+factor per instance feeds GoRouting's EstimateExec so stragglers
+organically receive less work (straggler mitigation).
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from ..core.estimator import BatchLatencyEstimator
+from ..core.gorouting import GoRouting, InstanceState, QueuedStub
+from ..core.request import Phase, Request
+from .engine import Engine
+
+
+@dataclass
+class ServiceConfig:
+    heartbeat_timeout: float = 5.0
+    speed_ewma: float = 0.2
+
+
+class ServiceController:
+    def __init__(self, router, est: BatchLatencyEstimator,
+                 cfg: ServiceConfig = ServiceConfig()):
+        self.router = router
+        self.est = est
+        self.cfg = cfg
+        self.engines: dict[int, Engine] = {}
+        self.states: dict[int, InstanceState] = {}
+        # durable request log: prompt + tokens streamed so far — failover
+        # resumes generation exactly where the dead instance stopped.
+        self.request_log: dict[int, tuple[Request, np.ndarray, list]] = {}
+        self.finished: list[Request] = []
+        self._iid = itertools.count()
+        self.now = 0.0
+
+    # --- elasticity -------------------------------------------------------
+    def add_instance(self, engine: Engine) -> int:
+        iid = next(self._iid)
+        self.engines[iid] = engine
+        self.states[iid] = InstanceState(
+            iid=iid, b_f=engine.bm.free_blocks,
+            total_blocks=engine.bm.num_device_blocks)
+        return iid
+
+    def remove_instance(self, iid: int, *, drain: bool = True) -> None:
+        """Graceful scale-down: stop dispatching; optionally re-dispatch."""
+        eng = self.engines.pop(iid, None)
+        st = self.states.pop(iid, None)
+        if eng is None:
+            return
+        orphans = eng.kill()
+        if drain:
+            for r in orphans:
+                self._redispatch(r)
+
+    def kill_instance(self, iid: int) -> None:
+        """Hard failure: engine dies, requests recovered from the log."""
+        eng = self.engines.get(iid)
+        if eng is None:
+            return
+        self.states[iid].alive = False
+        orphans = eng.kill()
+        del self.engines[iid]
+        del self.states[iid]
+        for r in orphans:
+            self._redispatch(r)
+
+    def _redispatch(self, req: Request) -> None:
+        logged = self.request_log.get(req.rid)
+        if logged is None:
+            return
+        _, prompt, partial = logged
+        self.submit(req, prompt, _relog=False, _prior=partial)
+
+    # --- dispatch ----------------------------------------------------------
+    def submit(self, req: Request, prompt_tokens: np.ndarray,
+               *, _relog: bool = True, _prior: Optional[list] = None
+               ) -> Optional[int]:
+        if _relog:
+            self.request_log[req.rid] = (req, np.asarray(prompt_tokens), [])
+        pools = list(self.states.values())
+        exec_est = self.est.prefill_time(req.prompt_len)
+        iid, _ = self.router.select(req, pools, None, self.now,
+                                    exec_est=exec_est)
+        if iid is None:
+            return None
+        self.states[iid].on_dispatch(
+            QueuedStub(req.rid, self.now, req.priority, req.weight,
+                       req.prompt_len, req.arrival + req.slo.ttft,
+                       exec_est), self.now)
+        self.engines[iid].add_request(req, prompt_tokens,
+                                      prior_outputs=_prior)
+        return iid
+
+    # --- serving loop -------------------------------------------------------
+    def step_all(self) -> int:
+        """One scheduling round across instances; returns tokens emitted."""
+        total = 0
+        for iid, eng in list(self.engines.items()):
+            res = eng.step()
+            st = self.states[iid]
+            st.b_f = eng.bm.free_blocks
+            if res is None:
+                continue
+            self.now = max(self.now, eng.now)
+            # straggler EWMA: observed vs estimated batch latency
+            est_t = max(res["plan"].est_time, 1e-9)
+            obs = max(res["latency"], 1e-9)
+            ratio = est_t / obs
+            st.speed = ((1 - self.cfg.speed_ewma) * st.speed
+                        + self.cfg.speed_ewma * min(max(ratio, 0.05), 2.0))
+            for r in res["emitted"]:
+                if r.generated == 1:
+                    st.on_prefill_done(r.rid, self.now)
+                logged = self.request_log.get(r.rid)
+                if logged is not None:       # stream into the durable log
+                    logged[2][:] = eng.outputs[r.rid]
+            for r in res["finished"]:
+                st.on_finished(r.rid)
+                self.finished.append(r)
+                self.request_log.pop(r.rid, None)
+            total += len(res["emitted"])
+        return total
+
+    def serve_until_drained(self, max_rounds: int = 5000) -> None:
+        for _ in range(max_rounds):
+            pending = any(e.has_work() for e in self.engines.values())
+            if not pending:
+                break
+            self.step_all()

@@ -1,0 +1,18 @@
+"""Discrete-event cluster simulator calibrated by the analytical TPU-v5e
+executor — the substrate for all paper-scale experiments (DESIGN.md §2)."""
+from .executor import (AnalyticalExecutor, InstanceHardware, ModelProfile,
+                       QWEN2_7B, QWEN3_32B, PEAK_FLOPS, HBM_BW, ICI_BW,
+                       HBM_BYTES, HOST_LINK_BW)
+from .engine_sim import DecodeAllPolicy, EngineSim, StepResult
+from .cluster import ClusterConfig, ClusterSim, HANDOFF_DELAY
+from .workloads import WORKLOADS, WorkloadSpec
+from .metrics import Summary, summarize, gain_timeline, urgent_timeout_timeline
+
+__all__ = [
+    "AnalyticalExecutor", "InstanceHardware", "ModelProfile", "QWEN2_7B",
+    "QWEN3_32B", "PEAK_FLOPS", "HBM_BW", "ICI_BW", "HBM_BYTES",
+    "HOST_LINK_BW", "DecodeAllPolicy", "EngineSim", "StepResult",
+    "ClusterConfig", "ClusterSim", "HANDOFF_DELAY", "WORKLOADS",
+    "WorkloadSpec", "Summary", "summarize", "gain_timeline",
+    "urgent_timeout_timeline",
+]

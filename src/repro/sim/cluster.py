@@ -1,0 +1,228 @@
+"""Event-driven multi-instance cluster simulation (service layer in the loop).
+
+Supports the paper's two deployment modes:
+
+* **PD co-location** — each instance runs prefill+decode; GoRouting picks
+  one instance per request (decode pool = None).
+* **PD disaggregation** — prefill instances run the local scheduler
+  (SlideBatching with φ_p or a baseline); on prefill completion the request
+  and its KV are pushed (xLLM layer-wise push mode — modeled as a small
+  handoff delay since the push overlaps prefill) to the chosen decode
+  instance, which batches all ready decodes each iteration.
+
+Fault tolerance: instances can be killed at scheduled times; their in-flight
+requests are re-dispatched by the router (prefill progress lost — KV dies
+with the instance).  Instances can also be added at runtime (elastic scale).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional
+
+from ..core.batching import EngineConfig
+from ..core.estimator import BatchLatencyEstimator
+from ..core.gorouting import InstanceState, QueuedStub
+from ..core.request import Phase, Request
+from .engine_sim import DecodeAllPolicy, EngineSim
+from .executor import AnalyticalExecutor
+
+ARRIVAL, STEP, KILL, SCALE_UP, HANDOFF = 0, 1, 2, 3, 4
+HANDOFF_DELAY = 2e-3   # s; layer-wise KV push overlaps prefill (App. B)
+
+
+@dataclass
+class ClusterConfig:
+    pd_mode: str = "coloc"           # "coloc" | "disagg"
+    n_prefill: int = 4               # instances (coloc: all instances)
+    n_decode: int = 0                # disagg only
+    heartbeat_interval: float = 0.5  # b_f refresh period (s)
+    heartbeat_timeout: float = 2.0   # declare dead after silence (unused in
+                                     # sim — kills are explicit — kept for API)
+
+
+class ClusterSim:
+    def __init__(self, make_policy_fn, router, executor: AnalyticalExecutor,
+                 est: BatchLatencyEstimator, eng_cfg: EngineConfig,
+                 cluster_cfg: ClusterConfig, bm_kwargs: Optional[dict] = None):
+        self.make_policy_fn = make_policy_fn
+        self.router = router
+        self.executor = executor
+        self.est = est
+        self.eng_cfg = eng_cfg
+        self.ccfg = cluster_cfg
+        self.bm_kwargs = bm_kwargs or {}
+        self._iid = itertools.count()
+        self.engines: dict[int, EngineSim] = {}
+        self.states: dict[int, InstanceState] = {}
+        self.decode_engines: dict[int, EngineSim] = {}
+        self.decode_states: dict[int, InstanceState] = {}
+        self.decode_target: dict[int, int] = {}   # rid -> decode iid (disagg)
+        self.finished: list[Request] = []
+        self.dropped: list[Request] = []
+        for _ in range(cluster_cfg.n_prefill):
+            self._new_instance(prefill=True)
+        for _ in range(cluster_cfg.n_decode):
+            self._new_instance(prefill=False)
+
+    # ------------------------------------------------------------------
+    def _new_instance(self, prefill: bool) -> int:
+        iid = next(self._iid)
+        from ..core.blocks import BlockManager
+        bm = BlockManager(self.executor.num_blocks, self.executor.block_size,
+                          self.executor.t_block, beta=self.eng_cfg.beta,
+                          **self.bm_kwargs)
+        if prefill:
+            cfg = self.eng_cfg
+            if self.ccfg.pd_mode == "disagg":
+                from dataclasses import replace
+                cfg = replace(cfg, pd_mode="prefill")
+            eng = EngineSim(iid, self.make_policy_fn(), self.executor,
+                            self.est, cfg, bm)
+            self.engines[iid] = eng
+            self.states[iid] = InstanceState(
+                iid=iid, b_f=bm.num_device_blocks,
+                total_blocks=bm.num_device_blocks)
+        else:
+            eng = EngineSim(iid, DecodeAllPolicy(), self.executor,
+                            self.est, self.eng_cfg, bm)
+            self.decode_engines[iid] = eng
+            self.decode_states[iid] = InstanceState(
+                iid=iid, b_f=bm.num_device_blocks,
+                total_blocks=bm.num_device_blocks)
+        return iid
+
+    # ------------------------------------------------------------------
+    def run(self, requests: list[Request], *, until: Optional[float] = None,
+            kills: Optional[list[tuple[float, int]]] = None,
+            scale_ups: Optional[list[float]] = None) -> list[Request]:
+        """Simulate serving ``requests``; returns all requests (terminated)."""
+        seq = itertools.count()
+        heap: list[tuple[float, int, int, object]] = []
+        for r in sorted(requests, key=lambda r: r.arrival):
+            heapq.heappush(heap, (r.arrival, next(seq), ARRIVAL, r))
+        for t, iid in (kills or []):
+            heapq.heappush(heap, (t, next(seq), KILL, iid))
+        for t in (scale_ups or []):
+            heapq.heappush(heap, (t, next(seq), SCALE_UP, None))
+        last_hb = 0.0
+
+        while heap:
+            now, _, kind, payload = heapq.heappop(heap)
+            if until is not None and now > until:
+                break
+            # periodic b_f heartbeat (§4.4 monitoring)
+            if now - last_hb >= self.ccfg.heartbeat_interval:
+                self._heartbeat(now)
+                last_hb = now
+
+            if kind == ARRIVAL:
+                self._dispatch(payload, now, heap, seq)
+            elif kind == STEP:
+                self._step(payload, now, heap, seq)
+            elif kind == HANDOFF:
+                req, d_iid, tokens = payload
+                self._arrive_decode(req, d_iid, tokens, now, heap, seq)
+            elif kind == KILL:
+                self._kill(payload, now, heap, seq)
+            elif kind == SCALE_UP:
+                iid = self._new_instance(prefill=True)
+                if self.ccfg.pd_mode == "disagg":
+                    pass  # scale the prefill tier; decode tier static here
+        return requests
+
+    # ------------------------------------------------------------------
+    def _heartbeat(self, now: float) -> None:
+        for iid, eng in self.engines.items():
+            self.states[iid].b_f = eng.bm.free_blocks
+        for iid, eng in self.decode_engines.items():
+            self.decode_states[iid].b_f = eng.bm.free_blocks
+
+    def _dispatch(self, req: Request, now: float, heap, seq) -> None:
+        pools = list(self.states.values())
+        dpool = (list(self.decode_states.values())
+                 if self.ccfg.pd_mode == "disagg" else None)
+        exec_est = self.est.prefill_time(req.prompt_len)
+        p_iid, d_iid = self.router.select(
+            req, pools, dpool, now,
+            block_size=self.executor.block_size, exec_est=exec_est)
+        if p_iid is None:
+            self.dropped.append(req)
+            return
+        st = self.states[p_iid]
+        st.on_dispatch(QueuedStub(req.rid, now, req.priority, req.weight,
+                                  req.prompt_len,
+                                  req.arrival + req.slo.ttft, exec_est), now)
+        if d_iid is not None:
+            self.decode_target[req.rid] = d_iid
+        eng = self.engines[p_iid]
+        eng.add_request(req, now)
+        if eng.idle:
+            heapq.heappush(heap, (max(now, eng.busy_until), next(seq),
+                                  STEP, p_iid))
+
+    def _engine(self, iid: int) -> Optional[EngineSim]:
+        return self.engines.get(iid) or self.decode_engines.get(iid)
+
+    def _step(self, iid: int, now: float, heap, seq) -> None:
+        eng = self._engine(iid)
+        if eng is None or not eng.alive or now < eng.busy_until:
+            return
+        res = eng.step(now)
+        if res is None:
+            return
+        is_prefill_tier = iid in self.engines
+        st = (self.states if is_prefill_tier else self.decode_states)[iid]
+        for r in res.prefill_done:
+            st.on_prefill_done(r.rid, res.end)
+            if self.ccfg.pd_mode == "disagg" and is_prefill_tier \
+                    and r.phase != Phase.FINISHED:
+                self._handoff(r, eng, res.end, heap, seq)
+        for r in res.finished:
+            st.on_finished(r.rid)
+            self.finished.append(r)
+        heapq.heappush(heap, (res.end, next(seq), STEP, iid))
+
+    def _handoff(self, req: Request, p_eng: EngineSim, now: float,
+                 heap, seq) -> None:
+        """Prefill finished at ``now``: release prefill-side KV and schedule
+        the decode-side arrival after the (mostly overlapped) push delay.
+        Importing must NOT happen before ``t_arrive`` or the decode tier
+        could emit token 2 before token 1's timestamp."""
+        d_iid = self.decode_target.get(req.rid)
+        if d_iid is None or d_iid not in self.decode_engines \
+                or not self.decode_states[d_iid].alive:
+            alive = [s for s in self.decode_states.values() if s.alive]
+            if not alive:
+                self.dropped.append(req)
+                return
+            d_iid = max(alive, key=lambda s: s.b_f).iid
+        tokens = p_eng.export_request(req)
+        heapq.heappush(heap, (now + HANDOFF_DELAY, next(seq), HANDOFF,
+                              (req, d_iid, tokens)))
+
+    def _arrive_decode(self, req: Request, d_iid: int, tokens: int,
+                       now: float, heap, seq) -> None:
+        d_eng = self.decode_engines.get(d_iid)
+        if d_eng is None or not d_eng.alive:
+            self.dropped.append(req)
+            return
+        d_eng.import_request(req, tokens, now)
+        self.decode_states[d_iid].n_d += 1
+        if d_eng.idle:
+            heapq.heappush(heap, (max(now, d_eng.busy_until),
+                                  next(seq), STEP, d_iid))
+
+    def _kill(self, iid: int, now: float, heap, seq) -> None:
+        eng = self._engine(iid)
+        if eng is None:
+            return
+        orphans = eng.kill()
+        if iid in self.states:
+            self.states[iid].alive = False
+        if iid in self.decode_states:
+            self.decode_states[iid].alive = False
+        # failure recovery: re-dispatch from the request log (KV lost)
+        for r in orphans:
+            self._dispatch(r, now, heap, seq)

@@ -1,0 +1,99 @@
+"""Evaluation metrics (§5.1): TDG_Ratio, SLO attainment, latency
+distributions, per-priority splits, and the urgent/timeout timelines of
+Figs. 7 & 22."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, Optional
+
+import numpy as np
+
+from ..core.request import Request
+from ..core.tdg import ideal_gain, tdg_gain, tdg_ratio
+
+
+@dataclass
+class Summary:
+    n: int
+    tdg_ratio: float
+    slo_attainment: float
+    ttft_p50: float
+    ttft_p99: float
+    tpot_p50: float
+    tpot_p99: float
+    per_priority: dict[int, dict[str, float]] = field(default_factory=dict)
+
+    def row(self) -> dict:
+        d = {"n": self.n, "tdg_ratio": round(self.tdg_ratio, 4),
+             "slo": round(self.slo_attainment, 4),
+             "ttft_p50": round(self.ttft_p50, 4),
+             "ttft_p99": round(self.ttft_p99, 4),
+             "tpot_p50": round(self.tpot_p50, 4),
+             "tpot_p99": round(self.tpot_p99, 4)}
+        for p, m in sorted(self.per_priority.items()):
+            d[f"tdg_p{p}"] = round(m["tdg_ratio"], 4)
+            d[f"slo_p{p}"] = round(m["slo"], 4)
+        return d
+
+
+def _pct(vals: list[float], q: float) -> float:
+    return float(np.percentile(vals, q)) if vals else float("nan")
+
+
+def summarize(reqs: Iterable[Request], w_p: float = 1.0,
+              w_d: float = 1.0) -> Summary:
+    reqs = list(reqs)
+    ttfts = [r.ttft for r in reqs if r.ttft is not None]
+    tpots = [r.tpot for r in reqs if r.tpot is not None]
+    slo = (np.mean([r.met_slo() for r in reqs]) if reqs else 0.0)
+    per_prio: dict[int, dict[str, float]] = {}
+    for p in sorted({r.priority for r in reqs}):
+        sub = [r for r in reqs if r.priority == p]
+        per_prio[p] = {
+            "tdg_ratio": tdg_ratio(sub, w_p, w_d),
+            "slo": float(np.mean([r.met_slo() for r in sub])),
+            "ttft_p99": _pct([r.ttft for r in sub if r.ttft is not None], 99),
+        }
+    return Summary(
+        n=len(reqs),
+        tdg_ratio=tdg_ratio(reqs, w_p, w_d),
+        slo_attainment=float(slo),
+        ttft_p50=_pct(ttfts, 50), ttft_p99=_pct(ttfts, 99),
+        tpot_p50=_pct(tpots, 50), tpot_p99=_pct(tpots, 99),
+        per_priority=per_prio)
+
+
+def gain_timeline(reqs: Iterable[Request], bucket: float = 1.0,
+                  w_p: float = 1.0, w_d: float = 1.0) -> dict[int, float]:
+    """TDG earned per time bucket (Fig. 21)."""
+    out: dict[int, float] = {}
+    for r in reqs:
+        for i, t in enumerate(r.out_times, start=1):
+            if t < r.slo.token_deadline(r.arrival, i):
+                w = (w_p if i == 1 else w_d) * r.weight
+                out[int(t // bucket)] = out.get(int(t // bucket), 0.0) + w
+    return out
+
+
+def urgent_timeout_timeline(reqs: Iterable[Request], horizon: float,
+                            bucket: float = 1.0,
+                            urgent_window: float = 1.0) -> dict:
+    """Counts of urgent (approaching first-token deadline) and timed-out
+    requests over time (Figs. 7/22)."""
+    nb = int(horizon // bucket) + 1
+    urgent = np.zeros(nb)
+    timeout = np.zeros(nb)
+    for r in reqs:
+        dl = r.slo.token_deadline(r.arrival, 1)
+        first = r.out_times[0] if r.out_times else float("inf")
+        # urgent while waiting within `urgent_window` of the deadline
+        t0, t1 = dl - urgent_window, min(first, dl)
+        for b in range(max(0, int(t0 // bucket)),
+                       min(nb - 1, int(t1 // bucket)) + 1):
+            if t0 <= (b + 0.5) * bucket <= t1:
+                urgent[b] += 1
+        if first > dl:
+            b = int(min(dl, horizon - 1e-9) // bucket)
+            timeout[b] += 1
+    return {"urgent": urgent.tolist(), "timeout": timeout.tolist(),
+            "bucket": bucket}

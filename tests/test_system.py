@@ -1,0 +1,45 @@
+"""End-to-end system behaviour: the paper's full pipeline in miniature —
+multi-priority requests through GoRouting + SlideBatching + block
+management on the cluster simulator, validating the paper's headline
+ordering (ProServe >= baselines on TDG at high load)."""
+import pytest
+
+from repro.core import (EngineConfig, GoRouting, MinLoad, RouterConfig,
+                        make_policy)
+from repro.sim import (AnalyticalExecutor, ClusterConfig, ClusterSim,
+                       InstanceHardware, QWEN2_7B, summarize)
+from repro.sim.workloads import industrial
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ex = AnalyticalExecutor(QWEN2_7B, InstanceHardware(chips=4))
+    est, mape = ex.fit_estimator(n=200)
+    return ex, est
+
+
+def run(setup, policy, router_name, rate=90, dur=10, seed=11):
+    ex, est = setup
+    reqs = industrial(rate=rate, duration=dur, seed=seed)
+    router = (GoRouting(est, RouterConfig(pd_mode="coloc"))
+              if router_name == "gorouting" else MinLoad(est))
+    cs = ClusterSim(lambda: make_policy(policy), router, ex, est,
+                    EngineConfig(w_p=4.0), ClusterConfig(n_prefill=2))
+    cs.run(reqs)
+    return summarize(reqs, w_p=4.0)
+
+
+def test_proserve_beats_fcfs_baselines_under_load(setup):
+    ours = run(setup, "slidebatching", "gorouting")
+    vllm = run(setup, "vllm_fcfs", "min_load")
+    sarathi = run(setup, "sarathi_fcfs", "min_load")
+    assert ours.tdg_ratio >= vllm.tdg_ratio - 0.02
+    assert ours.tdg_ratio >= sarathi.tdg_ratio - 0.02
+
+
+def test_priority_ordering_preserved(setup):
+    """ProServe must give high priority at least as much TDG as low."""
+    s = run(setup, "slidebatching", "gorouting", rate=110)
+    if 1 in s.per_priority and 3 in s.per_priority:
+        assert s.per_priority[1]["tdg_ratio"] >= \
+            s.per_priority[3]["tdg_ratio"] - 0.05

@@ -1,0 +1,111 @@
+"""Gain-function properties (§2): TDG's trick-immunity vs the strawmen."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import Request, SLO
+from repro.core.tdg import (ideal_gain, ta_slo_gain, tdg_gain, tdg_ratio,
+                            weighted_slo_gain)
+
+
+def make_req(out_times, ttft=1.0, tpot=0.1, weight=1.0, output_len=None):
+    r = Request(prompt_len=10, output_len=output_len or len(out_times),
+                arrival=0.0, slo=SLO(ttft, tpot), weight=weight)
+    for t in out_times:
+        r.emit_token(t)
+    return r
+
+
+# --- deterministic behaviour ------------------------------------------------
+
+def test_all_on_time_equals_ideal():
+    times = [0.5 + 0.05 * i for i in range(10)]
+    r = make_req(times)
+    assert tdg_gain(r, 2.0, 1.0) == ideal_gain(r, 2.0, 1.0)
+
+
+def test_late_first_token_loses_only_first_weight():
+    times = [1.5] + [1.5 + 0.05 * i for i in range(1, 10)]
+    r = make_req(times)
+    # token 1 late; tokens 2..10 have deadlines 1.0+0.1*(i-1)
+    expected = sum(1.0 for i in range(2, 11)
+                   if times[i - 1] < 1.0 + 0.1 * (i - 1))
+    assert tdg_gain(r, 5.0, 1.0) == expected
+
+
+def test_priority_weight_scales_gain():
+    times = [0.5, 0.6, 0.7]
+    assert tdg_gain(make_req(times, weight=2.0)) == \
+        2.0 * tdg_gain(make_req(times, weight=1.0))
+
+
+# --- the postpone trick (§2): TDG immune, TA-SLO vulnerable -----------------
+
+def test_postpone_trick_helps_ta_slo_but_not_tdg():
+    # token 2 is late; delaying token 2 makes token 3's TBT pass under
+    # TA-SLO (the trick) but can never increase TDG.
+    honest = [0.5, 0.9, 0.95]          # TBT(3) = 0.05 < 0.1 ok
+    tricked = [0.5, 1.2, 1.25]         # postponed token 2 even later
+    slo = dict(ttft=1.0, tpot=0.1)
+    ta_h = ta_slo_gain(make_req(honest, **slo))
+    tdg_h = tdg_gain(make_req(honest, **slo))
+    tdg_t = tdg_gain(make_req(tricked, **slo))
+    assert tdg_t <= tdg_h              # trick never pays under TDG
+    # and TA-SLO credits the tricked schedule's token-3 TBT regardless
+    assert ta_slo_gain(make_req(tricked, **slo)) >= 2.0
+
+
+def test_weighted_slo_discard_trick():
+    """Once TTFT is missed, Weighted-SLO gives 0 — discarding is free.
+    TDG still pays for on-time later tokens, discouraging the discard."""
+    r = make_req([1.5, 1.55, 1.6], ttft=1.0, tpot=0.5)
+    assert weighted_slo_gain(r) == 0.0
+    assert tdg_gain(r) > 0.0
+
+
+# --- hypothesis properties ---------------------------------------------------
+
+@st.composite
+def timelines(draw):
+    n = draw(st.integers(1, 12))
+    gaps = draw(st.lists(st.floats(0.0, 0.5), min_size=n, max_size=n))
+    t, times = 0.0, []
+    for g in gaps:
+        t += g
+        times.append(t)
+    return times
+
+
+@given(timelines(), st.integers(0, 11), st.floats(0.01, 2.0))
+@settings(max_examples=200, deadline=None)
+def test_delaying_any_token_never_increases_tdg(times, idx, delay):
+    """Monotonicity: push token idx (and successors, to keep ordering)
+    later — TDG must not increase."""
+    if idx >= len(times):
+        idx = len(times) - 1
+    delayed = list(times)
+    for j in range(idx, len(times)):
+        delayed[j] = times[j] + delay
+    g0 = tdg_gain(make_req(times))
+    g1 = tdg_gain(make_req(delayed))
+    assert g1 <= g0 + 1e-12
+
+
+@given(timelines())
+@settings(max_examples=100, deadline=None)
+def test_tdg_bounded_by_ideal(times):
+    r = make_req(times)
+    assert 0.0 <= tdg_gain(r, 3.0, 1.0) <= ideal_gain(r, 3.0, 1.0) + 1e-12
+
+
+@given(timelines(), st.floats(0.0, 1.0))
+@settings(max_examples=100, deadline=None)
+def test_earlier_delivery_never_hurts(times, shrink):
+    """Delivering every token earlier (scaling all times down) cannot
+    reduce TDG — the positive-impact-of-early-completion property."""
+    earlier = [t * shrink for t in times]
+    assert tdg_gain(make_req(earlier)) >= tdg_gain(make_req(times)) - 1e-12
+
+
+def test_tdg_ratio_range():
+    rs = [make_req([0.5, 0.6]), make_req([5.0, 6.0])]
+    assert 0.0 <= tdg_ratio(rs) <= 1.0
