@@ -5,11 +5,11 @@ and sweeps so the whole suite runs on 1 CPU core in minutes.
 """
 from __future__ import annotations
 
-from repro.core import EngineConfig, RouterConfig
+from repro.core import EngineConfig
 from repro.sim import gain_timeline, summarize, urgent_timeout_timeline
-from repro.sim.workloads import WORKLOADS, WorkloadSpec
+from repro.sim.workloads import WorkloadSpec
 
-from .common import (get_exec, run_multi_node, run_single_node)
+from .common import get_exec, run_multi_node, run_single_node
 
 MAIN_SCHEDS = ["slidebatching", "vllm_fcfs", "weighted_vtc", "sarathi_fcfs",
                "sarathi_priority", "fair_batching"]
@@ -31,7 +31,6 @@ def fig2_partition_vs_colocation(fast=True):
     by_p = {p: [r for r in reqs if r.priority == p] for p in (1, 2, 3)}
     chips_of = {1: 1, 2: 1, 3: 2}
     from repro.core import make_policy
-    from repro.core.blocks import BlockManager
     from repro.sim import EngineSim
     all_rs = []
     for p, rs in by_p.items():

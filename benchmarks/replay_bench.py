@@ -1,0 +1,35 @@
+"""Service-tier replay benchmark: the identical request trace replayed
+through the cluster simulator under each global router, reporting the
+per-priority gain / SLO-attainment rows the async frontend reports live.
+This is the offline counterpart of ``examples/serve_cluster.py``."""
+from __future__ import annotations
+
+from repro.core import (EngineConfig, GoRouting, MinLoad, RoundRobin,
+                        RouterConfig, make_policy)
+from repro.sim import ClusterConfig, ClusterSim, replay_sim
+from repro.sim.workloads import WORKLOADS
+
+from .common import get_exec
+
+
+def replay_router_sweep(fast: bool = True) -> list[dict]:
+    ex, est, _ = get_exec()
+    datasets = ["sharegpt"] if fast else ["sharegpt", "azure", "industrial"]
+    rates = [40] if fast else [30, 60, 90]
+    routers = [
+        ("gorouting", lambda: GoRouting(est, RouterConfig(pd_mode="coloc"))),
+        ("min_load", lambda: MinLoad(est)),
+        ("round_robin", lambda: RoundRobin()),
+    ]
+    rows = []
+    for ds in datasets:
+        for rate in rates:
+            for rname, mk in routers:
+                reqs = WORKLOADS[ds](rate=rate, duration=6, seed=7)
+                cs = ClusterSim(lambda: make_policy("slidebatching"), mk(),
+                                ex, est, EngineConfig(w_p=4.0),
+                                ClusterConfig(pd_mode="coloc", n_prefill=4))
+                rep = replay_sim(cs, reqs, w_p=4.0)
+                rows.append({"name": "replay_router_sweep", "dataset": ds,
+                             "rate": rate, "router": rname, **rep.row()})
+    return rows

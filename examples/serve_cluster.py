@@ -1,23 +1,28 @@
-"""Multi-instance serving with GoRouting + fault tolerance + elasticity:
-three real engines behind the service controller; one is killed mid-flight
-(requests resume exactly from the durable log), a fresh one is added
-(elastic scale-up), and everything completes.
+"""Async multi-replica serving demo: the industrial diurnal trace replayed
+through the streaming ``ServiceFrontend`` — 64+ concurrent requests of
+three priority classes, GoRouting dispatch over real JAX engine replicas,
+continuous batching on per-replica driver threads, and per-priority
+TTFT/TPOT SLO attainment + gain measured at the CLIENT edge.
 
-    PYTHONPATH=src python examples/serve_cluster.py
+    PYTHONPATH=src python examples/serve_cluster.py             # full demo
+    PYTHONPATH=src python examples/serve_cluster.py --smoke     # CI-sized
 """
+import argparse
+import asyncio
 import sys
 
 sys.path.insert(0, "src")
 
 import jax                                                         # noqa: E402
-import numpy as np                                                 # noqa: E402
 
 from repro.configs import get_smoke                                # noqa: E402
-from repro.core import (EngineConfig, GoRouting, Request,          # noqa: E402
-                        RouterConfig, SLO, make_policy)
+from repro.core import (EngineConfig, GoRouting, RouterConfig,     # noqa: E402
+                        SLO, make_policy)
 from repro.core.estimator import BatchLatencyEstimator             # noqa: E402
 from repro.models import init_params                               # noqa: E402
-from repro.serving import Engine, ServiceController                # noqa: E402
+from repro.serving import Engine, FrontendConfig, ServiceFrontend  # noqa: E402
+from repro.sim import clip_lengths, replay_frontend                # noqa: E402
+from repro.sim.workloads import industrial                         # noqa: E402
 
 CFG = get_smoke("qwen1_5_0_5b")
 PARAMS = init_params(CFG, jax.random.PRNGKey(0))
@@ -26,39 +31,59 @@ PARAMS = init_params(CFG, jax.random.PRNGKey(0))
 def make_engine():
     return Engine(CFG, PARAMS, EngineConfig(eta=1.0, w_p=4.0, tau=1e9),
                   make_policy("slidebatching"),
-                  num_blocks=96, block_size=16, max_ctx=256)
+                  num_blocks=160, block_size=16, max_ctx=256)
 
 
-def main():
+async def serve(n_requests: int, n_replicas: int, max_out: int) -> None:
     est = BatchLatencyEstimator(a_p=1e-8, b_p=1e-8, c_p=1e-4, a_d=1e-8,
                                 b_d=1e-3, t_c=1e-2)
-    svc = ServiceController(GoRouting(est, RouterConfig(pd_mode="coloc")),
-                            est)
-    iids = [svc.add_instance(make_engine()) for _ in range(3)]
-    print(f"cluster up: instances {iids}")
+    frontend = ServiceFrontend(
+        GoRouting(est, RouterConfig(pd_mode="coloc")), est,
+        FrontendConfig(max_inflight=max(n_requests, 64)))
+    iids = [frontend.add_instance(make_engine()) for _ in range(n_replicas)]
+    await frontend.start()
+    print(f"cluster up: {n_replicas} engine replicas {iids}")
 
-    rng = np.random.default_rng(1)
-    for k in range(12):
-        plen = int(rng.integers(12, 40))
-        r = Request(prompt_len=plen, output_len=6, arrival=0.0,
-                    slo=SLO(600.0, 600.0), priority=1 + k % 2,
-                    weight=2.0 if k % 2 == 0 else 1.0)
-        iid = svc.submit(r, rng.integers(1, CFG.vocab, plen).astype(np.int32))
-        print(f"  req {r.rid} (prio {r.priority}) -> instance {iid}")
+    # industrial mix (Fig. 1): 3 priority classes, diurnal phase shifts.
+    # Clipped to smoke-model lengths; replayed at 1000x so the whole trace
+    # is in flight concurrently.  SLOs sized for CPU wall-clock.
+    trace = industrial(rate=n_requests / 2.0, duration=8.0,
+                       seed=1)[:n_requests]
+    trace = clip_lengths(trace, max_in=48, max_out=max_out,
+                         slo=SLO(ttft=90.0, tpot=15.0))
+    prios = sorted({r.priority for r in trace})
+    print(f"replaying {len(trace)} requests, priorities {prios} ...")
 
-    svc.step_all()
-    print(f"\nkilling instance {iids[0]} (hard failure)...")
-    svc.kill_instance(iids[0])
-    new_iid = svc.add_instance(make_engine())
-    print(f"elastic scale-up: instance {new_iid} joins")
+    report = await replay_frontend(frontend, trace, CFG.vocab,
+                                   speed=1000.0, w_p=4.0)
+    await frontend.stop()
 
-    svc.serve_until_drained()
-    print(f"\nall {len(svc.finished)} requests completed "
-          f"(orphans resumed from the request log mid-generation)")
-    for iid, eng in svc.engines.items():
-        print(f"  instance {iid}: {eng.stats.iterations} iters, "
-              f"{eng.stats.tokens_out} tokens, speed-EWMA "
-              f"{svc.states[iid].speed:.2f}")
+    print(f"\n{report.n_completed}/{report.n_submitted} streams completed "
+          f"({report.n_rejected} rejected) in {report.wall:.1f}s wall")
+    s = report.summary
+    print(f"client-edge overall: gain(TDG)={s.tdg_ratio:.3f} "
+          f"SLO={s.slo_attainment:.2%} ttft_p50={s.ttft_p50:.2f}s "
+          f"tpot_p50={s.tpot_p50:.3f}s")
+    for p, m in sorted(report.per_priority.items()):
+        print(f"  priority {p}: gain={m['tdg_ratio']:.3f} "
+              f"SLO={m['slo']:.2%} ttft_p99={m['ttft_p99']:.2f}s")
+    for iid, eng in frontend.engines.items():
+        st = frontend.book.states.get(iid)
+        speed = f", speed-EWMA {st.speed:.2f}" if st else ""
+        print(f"  replica {iid}: {eng.stats.iterations} iters, "
+              f"{eng.stats.tokens_out} tokens{speed}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: few requests, short outputs")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--replicas", type=int, default=2)
+    args = ap.parse_args()
+    n = args.requests or (8 if args.smoke else 64)
+    max_out = 2 if args.smoke else 4
+    asyncio.run(serve(n, args.replicas, max_out))
 
 
 if __name__ == "__main__":

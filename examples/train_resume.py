@@ -13,7 +13,6 @@ sys.path.insert(0, "src")
 
 import jax                                                         # noqa: E402
 import jax.numpy as jnp                                            # noqa: E402
-import numpy as np                                                 # noqa: E402
 
 from repro.configs import get_smoke                                # noqa: E402
 from repro.models import init_params                               # noqa: E402

@@ -10,9 +10,9 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Callable, Optional, Protocol
+from typing import Protocol
 
-from .blocks import BlockManager, blocks_for
+from .blocks import BlockManager
 from .estimator import BatchLatencyEstimator
 from .request import Phase, Request
 

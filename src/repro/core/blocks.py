@@ -27,8 +27,7 @@ chunked-prefill work — prompt and generated tokens are all known).
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 from .request import Request

@@ -59,6 +59,13 @@ class InstanceState:
         self.ts = now
 
     def on_finished(self, rid: int) -> None:
+        stub = self.pre_queue.pop(rid, None)
+        if stub is not None:
+            # finished without ever reporting prefill-done here (e.g. a
+            # failover-resumed request whose first token predates this
+            # instance): clear the stub; n_d was never incremented.
+            self.prefill_len_total -= stub.prompt_len
+            return
         self.n_d = max(0, self.n_d - 1)
 
     def queue_exec_total(self, now: float) -> float:

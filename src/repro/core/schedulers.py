@@ -15,7 +15,6 @@ xLLM" methodology.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 from typing import Callable
 
 from .batching import (BatchEntry, BatchPlan, SchedView, compute_remaining,

@@ -20,10 +20,10 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-from .batching import (BatchEntry, BatchPlan, EngineConfig, Policy,
-                       SchedView, compute_remaining, exec_estimate,
-                       grow_with_eviction, max_chunk_for_budget,
-                       next_token_weight, needed_context)
+from .batching import (BatchEntry, BatchPlan, SchedView, compute_remaining,
+                       exec_estimate, grow_with_eviction,
+                       max_chunk_for_budget, next_token_weight,
+                       needed_context)
 from .blocks import blocks_for
 from .request import Phase, Request
 

@@ -20,7 +20,6 @@ import re
 import time
 import traceback
 
-import jax
 
 from . import hlo_cost
 from ..configs import ARCH_IDS, get
@@ -142,7 +141,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
             t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = hlo_cost.xla_cost_analysis(compiled)
         hlo = compiled.as_text()
         # trip-count-aware reconstruction (XLA cost_analysis counts while
         # bodies ONCE — hlo_cost multiplies by known_trip_count)

@@ -225,6 +225,15 @@ def _bf16_entry_dims(text: str) -> set:
     return dims
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """Normalise ``Compiled.cost_analysis()``: a dict on new jax, a
+    single-element list of dicts on jax<=0.4.x."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        return ca[0] if ca else {}
+    return ca
+
+
 def analyze(text: str) -> dict:
     comps = parse_module(text)
     mult = _multipliers(comps)

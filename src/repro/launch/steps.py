@@ -13,7 +13,6 @@ No device memory is allocated here: params/optimizer/cache all come from
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax

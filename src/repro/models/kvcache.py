@@ -8,9 +8,7 @@ plus SSM state; pure SSM archs carry state only — that is what makes the
 """
 from __future__ import annotations
 
-from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 

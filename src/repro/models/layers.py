@@ -14,7 +14,6 @@ Attention comes in three interchangeable implementations:
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional
 
 import jax

@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 from typing import Callable, Optional
 
 import jax
@@ -31,8 +30,8 @@ from .layers import (apply_norm, apply_rope, chunked_attention,
                      decode_attention, dense_attention, dense_init, gelu_mlp,
                      rmsnorm, sinusoidal_positions, split_keys, swiglu)
 from .moe import init_moe, moe_forward
-from .ssm import (SSMSpec, SSMState, init_ssm, init_state, spec_for,
-                  ssd_chunked, ssd_decode_step)
+from .ssm import (SSMSpec, SSMState, init_ssm, spec_for, ssd_chunked,
+                  ssd_decode_step)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,8 +1,14 @@
 """Real serving runtime: paged KV pool, jitted model exec, continuous-
-batching engine, GoRouting service controller with fault tolerance."""
+batching engine, threaded engine drivers, the synchronous GoRouting service
+controller, and the async streaming front-end."""
 from .kv_pool import PagedKVPool
-from .engine import Engine, EngineStats
+from .engine import Engine, EngineDriver, EngineStats, StepEvent, TokenEvent
+from .dispatch import RouterBook
 from .service import ServiceController, ServiceConfig
+from .frontend import (AdmissionError, FrontendConfig, RequestStream,
+                       ServiceFrontend)
 
-__all__ = ["PagedKVPool", "Engine", "EngineStats", "ServiceController",
-           "ServiceConfig"]
+__all__ = ["PagedKVPool", "Engine", "EngineDriver", "EngineStats",
+           "StepEvent", "TokenEvent", "RouterBook", "ServiceController",
+           "ServiceConfig", "AdmissionError", "FrontendConfig",
+           "RequestStream", "ServiceFrontend"]

@@ -1,0 +1,102 @@
+"""Router-side bookkeeping shared by the synchronous ``ServiceController``
+and the asynchronous ``ServiceFrontend``.
+
+One ``RouterBook`` owns everything GoRouting needs to see about a fleet of
+engine replicas: per-instance :class:`InstanceState` (prefill queue mirror,
+decode counts, free blocks, EWMA speed), the durable request log used for
+failure recovery, and the dispatch step itself (router ``select`` + state
+mutation + logging).  Neither caller touches ``InstanceState`` directly —
+the frontend serialises access with a lock, the controller runs single
+threaded.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from ..core.estimator import BatchLatencyEstimator
+from ..core.gorouting import InstanceState, QueuedStub
+from ..core.request import Request
+
+
+class RouterBook:
+    def __init__(self, router, est: BatchLatencyEstimator,
+                 speed_ewma: float = 0.2):
+        self.router = router
+        self.est = est
+        self.speed_ewma = speed_ewma
+        self.states: dict[int, InstanceState] = {}
+        # durable request log: request + prompt + tokens streamed so far —
+        # failover resumes generation exactly where the dead replica stopped.
+        self.request_log: dict[int, tuple[Request, np.ndarray, list]] = {}
+
+    # --- instance lifecycle -------------------------------------------
+    def add_instance(self, iid: int, total_blocks: int,
+                     free_blocks: int) -> InstanceState:
+        st = InstanceState(iid=iid, b_f=free_blocks,
+                           total_blocks=total_blocks)
+        self.states[iid] = st
+        return st
+
+    def drop_instance(self, iid: int) -> None:
+        st = self.states.pop(iid, None)
+        if st is not None:
+            st.alive = False
+
+    # --- request log ---------------------------------------------------
+    def log_request(self, req: Request, prompt_tokens) -> None:
+        self.request_log[req.rid] = (req, np.asarray(prompt_tokens), [])
+
+    def logged_partial(self, rid: int) -> Optional[list]:
+        logged = self.request_log.get(rid)
+        return None if logged is None else logged[2]
+
+    def forget(self, rid: int) -> None:
+        self.request_log.pop(rid, None)
+
+    # --- dispatch ------------------------------------------------------
+    def route(self, req: Request, now: float,
+              exec_est: Optional[float] = None) -> Optional[int]:
+        """Pick an instance via the router and record the dispatch."""
+        pools = list(self.states.values())
+        if exec_est is None:
+            exec_est = self.est.prefill_time(req.prompt_len)
+        iid, _ = self.router.select(req, pools, None, now,
+                                    exec_est=exec_est)
+        if iid is None:
+            return None
+        self.states[iid].on_dispatch(
+            QueuedStub(req.rid, now, req.priority, req.weight,
+                       req.prompt_len, req.arrival + req.slo.ttft,
+                       exec_est), now)
+        return iid
+
+    # --- event-driven state updates (§4.4 monitoring) ------------------
+    def heartbeat(self, iid: int, free_blocks: int) -> None:
+        """Periodic b_f refresh with no latency observation."""
+        st = self.states.get(iid)
+        if st is not None:
+            st.b_f = free_blocks
+
+    def observe_step(self, iid: int, *, free_blocks: int, est_time: float,
+                     latency: float) -> None:
+        st = self.states.get(iid)
+        if st is None:
+            return
+        st.b_f = free_blocks
+        # straggler EWMA: observed vs estimated batch latency
+        ratio = max(est_time, 1e-9) / max(latency, 1e-9)
+        st.speed = ((1 - self.speed_ewma) * st.speed
+                    + self.speed_ewma * min(max(ratio, 0.05), 2.0))
+
+    def on_first_token(self, iid: int, rid: int, now: float) -> None:
+        st = self.states.get(iid)
+        if st is not None:
+            st.on_prefill_done(rid, now)
+
+    def on_finished(self, iid: int, rid: int) -> None:
+        st = self.states.get(iid)
+        if st is not None:
+            st.on_finished(rid)
+        self.forget(rid)

@@ -15,24 +15,57 @@ One ``Engine`` = one model replica.  Each iteration:
      bootstrap happens in ``calibrate``).
 
 The engine clock can be virtual (``clock=manual``) for deterministic tests.
+
+Two driving modes:
+
+* synchronous — a caller (tests, ``ServiceController``) invokes ``step()``
+  directly and inspects the returned dict;
+* threaded — an ``EngineDriver`` owns the engine on its own thread, pulls
+  submissions from a per-instance inbox queue, and forwards per-token
+  ``TokenEvent``s plus per-step ``StepEvent``s to a sink (the async
+  ``ServiceFrontend``).  All engine state is touched only on the driver
+  thread, so the engine itself needs no locks.
 """
 from __future__ import annotations
 
+import queue
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.batching import BatchPlan, EngineConfig, SchedView, compute_remaining
+from ..core.batching import BatchPlan, EngineConfig, SchedView
 from ..core.blocks import BlockManager, blocks_for
 from ..core.estimator import BatchLatencyEstimator
 from ..core.request import Phase, Request
-from ..models.model import ArchConfig, init_params
+from ..models.model import ArchConfig
 from . import model_exec
 from .kv_pool import PagedKVPool
+
+
+@dataclass(frozen=True)
+class TokenEvent:
+    """One token leaving an engine, stamped on the driver thread."""
+    rid: int
+    token: int
+    index: int                   # 1-based output position
+    t_wall: float                # time.monotonic() at emission
+    first: bool
+    last: bool
+
+
+@dataclass(frozen=True)
+class StepEvent:
+    """Engine-side summary of one iteration, for router bookkeeping."""
+    iid: int
+    free_blocks: int
+    latency: float
+    est_time: float
+    prefill_done: tuple = ()     # rids whose first token just came out
+    finished: tuple = ()         # rids fully generated this step
 
 
 @dataclass
@@ -63,11 +96,20 @@ class Engine:
             a_p=1e-8, b_p=1e-8, c_p=1e-5, a_d=1e-8, b_d=1e-4, t_c=1e-3)
         self.queue: list[Request] = []
         self.now = 0.0
+        # when set (frontend mode), ``now`` tracks wall time relative to a
+        # shared epoch so token stamps are monotonic ACROSS replicas —
+        # required for cross-replica failover and client-edge metrics.
+        self._wall_epoch: Optional[float] = None
         self.stats = EngineStats()
         self._profile: list[tuple[list, float]] = []
         self.refit_every = 50
         self.alive = True
         self.outputs: dict[int, list[int]] = {}
+        # streaming hook: called as on_token(req, tok, first, last) from
+        # whichever thread steps the engine, at the instant of emission —
+        # this is what lets TTFT/TPOT be measured at the client edge.
+        self.on_token: Optional[Callable[[Request, int, bool, bool],
+                                         None]] = None
 
     # ------------------------------------------------------------------
     def add_request(self, req: Request, prompt_tokens: np.ndarray,
@@ -97,9 +139,17 @@ class Engine:
             self.pool.drop_device_blocks(r.rid)
             self.stats.evictions += 1
 
+    def use_wall_clock(self, epoch: float) -> None:
+        """Drive ``now`` from ``time.monotonic() - epoch`` (shared across
+        replicas) instead of the per-engine virtual latency accumulator."""
+        self._wall_epoch = epoch
+        self.now = max(self.now, time.monotonic() - epoch)
+
     def step(self) -> Optional[dict]:
         if not self.alive:
             return None
+        if self._wall_epoch is not None:
+            self.now = max(self.now, time.monotonic() - self._wall_epoch)
         self.bm.complete_offloads(self.now)
         view = SchedView(self.queue, self.bm, self.est, self.eng_cfg,
                          self.now)
@@ -168,7 +218,10 @@ class Engine:
                 self._emit(e.req, int(tok), emitted)
 
         latency = time.monotonic() - t0
-        self.now += latency
+        if self._wall_epoch is not None:
+            self.now = max(self.now, time.monotonic() - self._wall_epoch)
+        else:
+            self.now += latency
         self.stats.iterations += 1
         self.stats.batch_latencies.append(latency)
         self._profile.append((plan.work_items(), latency))
@@ -192,9 +245,12 @@ class Engine:
 
     def _emit(self, r: Request, tok: int, emitted: list) -> None:
         self.outputs[r.rid].append(tok)
+        first = r.generated == 0
         r.emit_token(self.now)
         self.stats.tokens_out += 1
         emitted.append(r)
+        if self.on_token is not None:
+            self.on_token(r, tok, first, r.phase == Phase.FINISHED)
 
     def _refit(self) -> None:
         try:
@@ -222,3 +278,124 @@ class Engine:
             r.instance = None
         self.queue.clear()
         return orphans
+
+
+# --------------------------------------------------------------------------
+# threaded driver loop
+# --------------------------------------------------------------------------
+
+class EngineDriver:
+    """Runs one ``Engine``'s iteration loop on a dedicated thread.
+
+    Submissions arrive on a per-instance inbox queue (fed by GoRouting
+    dispatch in the ``ServiceFrontend``); each loop iteration drains the
+    inbox into the engine queue, forms/executes one batch, and forwards
+    token + step events to ``sink(event)``.  The sink is called on the
+    driver thread and must be thread-safe (the frontend bridges into its
+    asyncio loop with ``call_soon_threadsafe``).
+    """
+
+    def __init__(self, iid: int, engine: Engine,
+                 sink: Callable[[object], None],
+                 *, idle_wait: float = 2e-3, name: Optional[str] = None):
+        self.iid = iid
+        self.engine = engine
+        self.sink = sink
+        self.idle_wait = idle_wait
+        self.inbox: "queue.Queue[tuple]" = queue.Queue()
+        # rids added to THIS engine that have not yet emitted here —
+        # drives StepEvent.prefill_done.  ``generated == 1`` would miss
+        # failover-resumed requests whose first token predates this engine.
+        self._awaiting_first: set[int] = set()
+        self._first_done: list[int] = []
+        self._stop = threading.Event()
+        self._idle = threading.Event()
+        self._idle.set()
+        self._thread = threading.Thread(
+            target=self._run, name=name or f"engine-driver-{iid}",
+            daemon=True)
+        engine.on_token = self._on_token
+
+    # -- submission (any thread) ---------------------------------------
+    def submit(self, req: Request, prompt_tokens,
+               prior_outputs: Optional[list] = None) -> None:
+        self.inbox.put((req, prompt_tokens, prior_outputs))
+        self._idle.clear()
+
+    def pending(self) -> int:
+        return self.inbox.qsize()
+
+    @property
+    def idle(self) -> bool:
+        """True when the inbox is drained and the engine has no work."""
+        return self._idle.is_set()
+
+    # -- lifecycle ------------------------------------------------------
+    def start(self) -> None:
+        self._thread.start()
+
+    def stop(self, timeout: float = 10.0) -> None:
+        self._stop.set()
+        if self._thread.ident is not None:   # never-started threads can't join
+            self._thread.join(timeout)
+
+    def join_idle(self, timeout: float = 60.0) -> bool:
+        """Block until the driver has drained all submitted work."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if self._idle.is_set() and self.inbox.empty():
+                return True
+            time.sleep(1e-3)
+        return False
+
+    def kill(self) -> list[Request]:
+        """Hard-stop the thread and return orphaned requests (plus any
+        submissions still sitting in the inbox, never started)."""
+        self.stop(timeout=120.0)     # a mid-step JIT compile can be slow
+        orphans = self.engine.kill()
+        while True:
+            try:
+                req, _, _ = self.inbox.get_nowait()
+            except queue.Empty:
+                break
+            orphans.append(req)
+        return orphans
+
+    # -- driver thread --------------------------------------------------
+    def _on_token(self, req: Request, tok: int, first: bool,
+                  last: bool) -> None:
+        if req.rid in self._awaiting_first:
+            self._awaiting_first.discard(req.rid)
+            self._first_done.append(req.rid)
+        self.sink(TokenEvent(req.rid, tok, req.generated,
+                             time.monotonic(), first, last))
+
+    def _run(self) -> None:
+        eng = self.engine
+        while not self._stop.is_set():
+            drained = False
+            while True:
+                try:
+                    req, prompt, prior = self.inbox.get_nowait()
+                except queue.Empty:
+                    break
+                eng.add_request(req, prompt, prior_outputs=prior)
+                self._awaiting_first.add(req.rid)
+                drained = True
+            res = eng.step() if eng.alive else None
+            if res is None:
+                if not drained and not eng.has_work():
+                    self._idle.set()
+                # park until new work or shutdown (also avoids a hot spin
+                # when queued work is temporarily unschedulable)
+                self._stop.wait(self.idle_wait)
+                continue
+            self._idle.clear()
+            first_done, self._first_done = self._first_done, []
+            self.sink(StepEvent(
+                iid=self.iid, free_blocks=eng.bm.free_blocks,
+                latency=res["latency"], est_time=res["plan"].est_time,
+                prefill_done=tuple(first_done),
+                finished=tuple(r.rid for r in res["finished"])))
+            if not eng.has_work() and self.inbox.empty():
+                self._idle.set()

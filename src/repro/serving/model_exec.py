@@ -17,13 +17,12 @@ families at paper scale.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..kernels.ops import chunked_prefill_attention, paged_decode_attention
-from ..models.layers import apply_norm, apply_rope, gelu_mlp, rmsnorm, swiglu
+from ..models.layers import apply_norm, apply_rope, gelu_mlp, swiglu
 from ..models.model import ArchConfig, _qkv
 
 

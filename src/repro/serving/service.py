@@ -1,25 +1,29 @@
-"""Service layer: GoRouting dispatch over N real engines + fault tolerance.
+"""Synchronous service layer: GoRouting dispatch over N real engines.
 
-Production shape (DESIGN.md §5): every request is appended to a durable
-request log at admission; heartbeats mark instances dead after
-``heartbeat_timeout``; orphaned requests of a dead instance are re-dispatched
-from the log (KV lost — recomputed); instances can be added at runtime
-(elastic scale-up) and are immediately eligible for dispatch; an EWMA speed
-factor per instance feeds GoRouting's EstimateExec so stragglers
-organically receive less work (straggler mitigation).
+This is now a thin deterministic wrapper over the same :class:`RouterBook`
+bookkeeping that powers the async ``ServiceFrontend`` — one caller thread
+drives every engine with ``step_all()``.  Use it for tests and offline
+experiments where determinism matters; use ``ServiceFrontend`` to serve
+live concurrent traffic.
+
+Fault-tolerance semantics are shared (DESIGN.md §5): every request is
+appended to a durable request log at admission; orphaned requests of a
+dead instance are re-dispatched from the log (KV lost — recomputed);
+instances can be added at runtime (elastic scale-up); an EWMA speed factor
+per instance feeds GoRouting's EstimateExec so stragglers organically
+receive less work.
 """
 from __future__ import annotations
 
 import itertools
-import time
-from dataclasses import dataclass, field
-from typing import Callable, Optional
+from dataclasses import dataclass
+from typing import Optional
 
 import numpy as np
 
 from ..core.estimator import BatchLatencyEstimator
-from ..core.gorouting import GoRouting, InstanceState, QueuedStub
-from ..core.request import Phase, Request
+from ..core.request import Request
+from .dispatch import RouterBook
 from .engine import Engine
 
 
@@ -32,31 +36,42 @@ class ServiceConfig:
 class ServiceController:
     def __init__(self, router, est: BatchLatencyEstimator,
                  cfg: ServiceConfig = ServiceConfig()):
-        self.router = router
-        self.est = est
         self.cfg = cfg
+        self.book = RouterBook(router, est, speed_ewma=cfg.speed_ewma)
         self.engines: dict[int, Engine] = {}
-        self.states: dict[int, InstanceState] = {}
-        # durable request log: prompt + tokens streamed so far — failover
-        # resumes generation exactly where the dead instance stopped.
-        self.request_log: dict[int, tuple[Request, np.ndarray, list]] = {}
         self.finished: list[Request] = []
         self._iid = itertools.count()
         self.now = 0.0
+
+    # thin delegation — the book owns router-side state
+    @property
+    def router(self):
+        return self.book.router
+
+    @property
+    def est(self) -> BatchLatencyEstimator:
+        return self.book.est
+
+    @property
+    def states(self):
+        return self.book.states
+
+    @property
+    def request_log(self):
+        return self.book.request_log
 
     # --- elasticity -------------------------------------------------------
     def add_instance(self, engine: Engine) -> int:
         iid = next(self._iid)
         self.engines[iid] = engine
-        self.states[iid] = InstanceState(
-            iid=iid, b_f=engine.bm.free_blocks,
-            total_blocks=engine.bm.num_device_blocks)
+        self.book.add_instance(iid, engine.bm.num_device_blocks,
+                               engine.bm.free_blocks)
         return iid
 
     def remove_instance(self, iid: int, *, drain: bool = True) -> None:
         """Graceful scale-down: stop dispatching; optionally re-dispatch."""
         eng = self.engines.pop(iid, None)
-        st = self.states.pop(iid, None)
+        self.book.drop_instance(iid)
         if eng is None:
             return
         orphans = eng.kill()
@@ -66,39 +81,29 @@ class ServiceController:
 
     def kill_instance(self, iid: int) -> None:
         """Hard failure: engine dies, requests recovered from the log."""
-        eng = self.engines.get(iid)
+        eng = self.engines.pop(iid, None)
+        self.book.drop_instance(iid)
         if eng is None:
             return
-        self.states[iid].alive = False
-        orphans = eng.kill()
-        del self.engines[iid]
-        del self.states[iid]
-        for r in orphans:
+        for r in eng.kill():
             self._redispatch(r)
 
     def _redispatch(self, req: Request) -> None:
-        logged = self.request_log.get(req.rid)
-        if logged is None:
+        partial = self.book.logged_partial(req.rid)
+        if partial is None:
             return
-        _, prompt, partial = logged
-        self.submit(req, prompt, _relog=False, _prior=partial)
+        self.submit(req, self.book.request_log[req.rid][1],
+                    _relog=False, _prior=partial)
 
     # --- dispatch ----------------------------------------------------------
     def submit(self, req: Request, prompt_tokens: np.ndarray,
                *, _relog: bool = True, _prior: Optional[list] = None
                ) -> Optional[int]:
         if _relog:
-            self.request_log[req.rid] = (req, np.asarray(prompt_tokens), [])
-        pools = list(self.states.values())
-        exec_est = self.est.prefill_time(req.prompt_len)
-        iid, _ = self.router.select(req, pools, None, self.now,
-                                    exec_est=exec_est)
+            self.book.log_request(req, prompt_tokens)
+        iid = self.book.route(req, self.now)
         if iid is None:
             return None
-        self.states[iid].on_dispatch(
-            QueuedStub(req.rid, self.now, req.priority, req.weight,
-                       req.prompt_len, req.arrival + req.slo.ttft,
-                       exec_est), self.now)
         self.engines[iid].add_request(req, prompt_tokens,
                                       prior_outputs=_prior)
         return iid
@@ -109,27 +114,22 @@ class ServiceController:
         total = 0
         for iid, eng in list(self.engines.items()):
             res = eng.step()
-            st = self.states[iid]
-            st.b_f = eng.bm.free_blocks
             if res is None:
+                self.book.heartbeat(iid, eng.bm.free_blocks)
                 continue
             self.now = max(self.now, eng.now)
-            # straggler EWMA: observed vs estimated batch latency
-            est_t = max(res["plan"].est_time, 1e-9)
-            obs = max(res["latency"], 1e-9)
-            ratio = est_t / obs
-            st.speed = ((1 - self.cfg.speed_ewma) * st.speed
-                        + self.cfg.speed_ewma * min(max(ratio, 0.05), 2.0))
+            self.book.observe_step(iid, free_blocks=eng.bm.free_blocks,
+                                   est_time=res["plan"].est_time,
+                                   latency=res["latency"])
             for r in res["emitted"]:
                 if r.generated == 1:
-                    st.on_prefill_done(r.rid, self.now)
-                logged = self.request_log.get(r.rid)
-                if logged is not None:       # stream into the durable log
-                    logged[2][:] = eng.outputs[r.rid]
+                    self.book.on_first_token(iid, r.rid, self.now)
+                partial = self.book.logged_partial(r.rid)
+                if partial is not None:  # stream into the durable log
+                    partial[:] = eng.outputs[r.rid]
             for r in res["finished"]:
-                st.on_finished(r.rid)
+                self.book.on_finished(iid, r.rid)
                 self.finished.append(r)
-                self.request_log.pop(r.rid, None)
             total += len(res["emitted"])
         return total
 

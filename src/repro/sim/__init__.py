@@ -7,6 +7,7 @@ from .engine_sim import DecodeAllPolicy, EngineSim, StepResult
 from .cluster import ClusterConfig, ClusterSim, HANDOFF_DELAY
 from .workloads import WORKLOADS, WorkloadSpec
 from .metrics import Summary, summarize, gain_timeline, urgent_timeout_timeline
+from .replay import ReplayReport, clip_lengths, replay_frontend, replay_sim
 
 __all__ = [
     "AnalyticalExecutor", "InstanceHardware", "ModelProfile", "QWEN2_7B",
@@ -14,5 +15,6 @@ __all__ = [
     "HOST_LINK_BW", "DecodeAllPolicy", "EngineSim", "StepResult",
     "ClusterConfig", "ClusterSim", "HANDOFF_DELAY", "WORKLOADS",
     "WorkloadSpec", "Summary", "summarize", "gain_timeline",
-    "urgent_timeout_timeline",
+    "urgent_timeout_timeline", "ReplayReport", "clip_lengths",
+    "replay_frontend", "replay_sim",
 ]

@@ -16,10 +16,10 @@ Transfer critical-path rules (§4.3):
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Optional
 
 from ..core.batching import (BatchPlan, EngineConfig, SchedView,
-                             compute_remaining, needed_context)
+                             compute_remaining)
 from ..core.blocks import BlockManager
 from ..core.estimator import BatchLatencyEstimator
 from ..core.request import Phase, Request

@@ -19,7 +19,6 @@ estimator error propagates into scheduling realistically.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 
 import numpy as np

@@ -4,12 +4,12 @@ Figs. 7 & 22."""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Iterable, Optional
+from typing import Iterable
 
 import numpy as np
 
 from ..core.request import Request
-from ..core.tdg import ideal_gain, tdg_gain, tdg_ratio
+from ..core.tdg import tdg_ratio
 
 
 @dataclass

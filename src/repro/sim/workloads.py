@@ -13,7 +13,7 @@ phase-shifted diurnal load (Fig. 1) and business-value weights.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 import numpy as np

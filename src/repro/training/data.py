@@ -7,7 +7,7 @@ repeated n-gram motifs) gives the loss curve some structure to descend.
 """
 from __future__ import annotations
 
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 

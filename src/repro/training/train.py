@@ -11,14 +11,13 @@ log-sum-exp reduction lowers to small all-reduces over the model axis.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..models.model import ArchConfig, forward
-from .optimizer import AdamWState, adamw_update, init_adamw
+from .optimizer import AdamWState, adamw_update
 
 
 def softmax_cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:

@@ -1,8 +1,10 @@
 """Block-management (§4.3) accounting invariants + latency estimator (§4.1)."""
-import hypothesis.strategies as st
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core import BlockManager, Request, SLO, blocks_for
 from repro.core.estimator import BatchLatencyEstimator

@@ -1,7 +1,6 @@
 """Distribution layer: mesh construction, sharding rules, a REAL mini
 dry-run (8 fake devices in a subprocess so the main process keeps 1
 device), and the trip-count HLO cost analyzer."""
-import json
 import subprocess
 import sys
 import textwrap
@@ -12,7 +11,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get, get_smoke
-from repro.launch.hlo_cost import analyze, parse_module
+from repro.launch.hlo_cost import analyze, xla_cost_analysis
 
 
 def run_sub(code: str) -> str:
@@ -31,7 +30,7 @@ def test_mesh_shapes_in_subprocess():
     out = run_sub("""
         from repro.launch.mesh import make_production_mesh, make_debug_mesh
         m = make_debug_mesh((4, 2), ("data", "model"))
-        print(m.shape)
+        print(dict(m.shape))
         print(m.axis_names)
     """)
     assert "'data': 4" in out and "'model': 2" in out
@@ -121,7 +120,7 @@ def test_hlo_cost_trip_count_weighting():
     expected = 6 * 2 * 128 ** 3
     assert acc["flops"] == pytest.approx(expected, rel=1e-6)
     # XLA's own analysis counts the body once — ours must not
-    assert compiled.cost_analysis()["flops"] == pytest.approx(
+    assert xla_cost_analysis(compiled)["flops"] == pytest.approx(
         expected / 6, rel=1e-6)
 
 
@@ -134,7 +133,7 @@ def test_hlo_cost_loop_free_exact():
     compiled = jax.jit(g).lower(A, B).compile()
     acc = analyze(compiled.as_text())
     assert acc["flops"] == 2 * 64 * 96 * 32
-    assert acc["bytes"] == compiled.cost_analysis()["bytes accessed"]
+    assert acc["bytes"] == xla_cost_analysis(compiled)["bytes accessed"]
 
 
 def test_nested_scan_multipliers():

@@ -3,12 +3,11 @@ teacher forcing, including through preemption / offload / reload."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_smoke
 from repro.core import EngineConfig, Request, SLO, make_policy
 from repro.models import forward, init_params
-from repro.serving import Engine, ServiceConfig, ServiceController
+from repro.serving import Engine, ServiceController
 from repro.core.gorouting import GoRouting, RouterConfig
 from repro.core.estimator import BatchLatencyEstimator
 

@@ -110,3 +110,23 @@ def test_straggler_speed_downweights():
     r = req(plen=100, ttft=60.0)
     pick, _ = gr.select(r, [slow, fast], None, now=0.0)
     assert pick == 1                    # effective load on slow is 0.8
+
+
+def test_finished_without_prefill_done_cleans_stub():
+    """A failover-resumed request can finish on an instance without ever
+    reporting prefill-done there; its stub must not leak (it would inflate
+    queue_exec_total and repel the router from the survivor forever)."""
+    st = InstanceState(iid=0, b_f=10, total_blocks=10)
+    st.on_dispatch(QueuedStub(7, 0.0, 1, 1.0, 100, 5.0, 0.1), 0.0)
+    assert st.prefill_len_total == 100
+    st.on_finished(7)
+    assert st.pre_queue == {}
+    assert st.prefill_len_total == 0
+    assert st.n_d == 0                       # was never incremented
+
+    # normal lifecycle still balances: dispatch -> prefill done -> finished
+    st.on_dispatch(QueuedStub(8, 0.0, 1, 1.0, 50, 5.0, 0.1), 0.0)
+    st.on_prefill_done(8, 1.0)
+    assert st.n_d == 1
+    st.on_finished(8)
+    assert st.n_d == 0 and st.pre_queue == {}

@@ -8,8 +8,8 @@ from repro.configs import ARCH_IDS, get, get_smoke
 from repro.models import (chunked_attention, decode_step, dense_attention,
                           forward, init_params, prefill)
 from repro.models.moe import init_moe, moe_forward, moe_ref
-from repro.models.ssm import (SSMState, init_ssm, init_state, spec_for,
-                              ssd_chunked, ssd_decode_step)
+from repro.models.ssm import (init_ssm, init_state, spec_for, ssd_chunked,
+                              ssd_decode_step)
 
 KEY = jax.random.PRNGKey(0)
 

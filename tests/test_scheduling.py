@@ -1,11 +1,8 @@
 """SlideBatching (Alg. 1) + baseline policies against the shared engine view."""
-import numpy as np
 import pytest
 
 from repro.core import (BatchLatencyEstimator, BlockManager, EngineConfig,
                         Request, SLO, SchedView, SlideBatching, make_policy)
-from repro.core.batching import compute_remaining
-from repro.core.request import Phase
 
 EST = BatchLatencyEstimator(a_p=1e-9, b_p=1e-9, c_p=2e-6, a_d=2e-8,
                             b_d=1e-4, t_c=2e-3)

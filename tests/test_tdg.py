@@ -1,6 +1,9 @@
 """Gain-function properties (§2): TDG's trick-immunity vs the strawmen."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core import Request, SLO
 from repro.core.tdg import (ideal_gain, ta_slo_gain, tdg_gain, tdg_ratio,
