@@ -1,7 +1,15 @@
-"""Service-tier replay benchmark: the identical request trace replayed
-through the cluster simulator under each global router, reporting the
-per-priority gain / SLO-attainment rows the async frontend reports live.
-This is the offline counterpart of ``examples/serve_cluster.py``."""
+"""Service-tier replay benchmarks.
+
+* ``replay_router_sweep`` — the identical request trace replayed through
+  the cluster simulator under each global router, reporting the
+  per-priority gain / SLO-attainment rows the async frontend reports live.
+  This is the offline counterpart of ``examples/serve_cluster.py``.
+* ``replay_shared_prefix`` — the shared-system-prompt trace replayed with
+  the radix prefix cache ON vs OFF, in BOTH simulated time (ClusterSim +
+  SimPrefixCache) and wall-clock mode (ServiceFrontend + real engines +
+  RadixPrefixCache), reporting prefill tokens actually computed, cache
+  hits and TTFT.  The offline counterpart of ``examples/shared_prefix.py``.
+"""
 from __future__ import annotations
 
 from repro.core import (EngineConfig, GoRouting, MinLoad, RoundRobin,
@@ -33,3 +41,73 @@ def replay_router_sweep(fast: bool = True) -> list[dict]:
                 rows.append({"name": "replay_router_sweep", "dataset": ds,
                              "rate": rate, "router": rname, **rep.row()})
     return rows
+
+
+def _shared_prefix_sim(fast: bool) -> list[dict]:
+    ex, est, _ = get_exec()
+    rate, duration = (40, 6) if fast else (80, 20)
+    rows = []
+    for cache_on in (True, False):
+        reqs = WORKLOADS["shared_prefix"](rate=rate, duration=duration,
+                                          seed=11, n_groups=4,
+                                          prefix_len=1024, p_shared=0.8)
+        cs = ClusterSim(lambda: make_policy("slidebatching"),
+                        GoRouting(est, RouterConfig(pd_mode="coloc")),
+                        ex, est, EngineConfig(w_p=4.0),
+                        ClusterConfig(pd_mode="coloc", n_prefill=2,
+                                      prefix_cache=cache_on))
+        rep = replay_sim(cs, reqs, w_p=4.0)
+        engines = list(cs.engines.values())
+        rows.append({
+            "name": "replay_shared_prefix",
+            "dataset": f"shared_prefix/sim/cache-{'on' if cache_on else 'off'}",
+            "mode": "sim", "prefix_cache": cache_on,
+            "prefill_tokens": sum(e.prefill_tokens for e in engines),
+            "cache_hit_tokens": sum(e.prefix_cache.hit_tokens
+                                    for e in engines if e.prefix_cache),
+            **rep.row()})
+    return rows
+
+
+def _shared_prefix_frontend(fast: bool) -> list[dict]:
+    """Wall-clock mode: real engines + radix cache behind the async
+    frontend (the shared smoke stack from ``repro.sim.replay``).  Each
+    configuration is replayed twice and the warm pass is reported, so
+    one-off JIT compilation doesn't pollute the comparison."""
+    import asyncio
+
+    from repro.sim import replay_frontend
+    from repro.sim.replay import smoke_frontend, smoke_shared_prefix_trace
+
+    # enough concurrent streams that prefill queueing dominates TTFT —
+    # at smoke scale fewer requests make the on/off TTFT delta pure noise
+    n = 48 if fast else 64
+
+    async def run(cache_on: bool) -> dict:
+        fe, cfg = smoke_frontend(2, prefix_cache=cache_on, w_p=4.0)
+        await fe.start()
+        trace = smoke_shared_prefix_trace(n, max_out=2)
+        rep = await replay_frontend(fe, trace, cfg.vocab, speed=200.0,
+                                    w_p=4.0)
+        engines = list(fe.engines.values())
+        row = {"name": "replay_shared_prefix",
+               "dataset": "shared_prefix/frontend/"
+                          f"cache-{'on' if cache_on else 'off'}",
+               "mode": "frontend", "prefix_cache": cache_on,
+               "prefill_tokens": sum(e.stats.prefill_tokens
+                                     for e in engines),
+               "cache_hit_tokens": sum(e.stats.cache_hit_tokens
+                                       for e in engines),
+               **rep.row()}
+        await fe.stop()
+        return row
+
+    rows = []
+    for cache_on in (True, False):
+        asyncio.run(run(cache_on))             # warm pass: JIT compilation
+        rows.append(asyncio.run(run(cache_on)))
+    return rows
+
+
+def replay_shared_prefix(fast: bool = True) -> list[dict]:
+    return _shared_prefix_sim(fast) + _shared_prefix_frontend(fast)

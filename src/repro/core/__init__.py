@@ -4,6 +4,7 @@ from .request import Request, SLO, Phase
 from .tdg import tdg_gain, tdg_ratio, ideal_gain, weighted_slo_gain, ta_slo_gain
 from .estimator import BatchLatencyEstimator
 from .blocks import BlockManager, blocks_for
+from .prefix import PrefixRegistry, SimPrefixCache, chunk_hashes
 from .batching import BatchEntry, BatchPlan, EngineConfig, SchedView
 from .slidebatching import SlideBatching
 from .schedulers import make_policy, POLICIES
@@ -13,7 +14,8 @@ from .gorouting import (GoRouting, MinLoad, RoundRobin, RouterConfig,
 __all__ = [
     "Request", "SLO", "Phase", "tdg_gain", "tdg_ratio", "ideal_gain",
     "weighted_slo_gain", "ta_slo_gain", "BatchLatencyEstimator",
-    "BlockManager", "blocks_for", "BatchEntry", "BatchPlan", "EngineConfig",
+    "BlockManager", "blocks_for", "PrefixRegistry", "SimPrefixCache",
+    "chunk_hashes", "BatchEntry", "BatchPlan", "EngineConfig",
     "SchedView", "SlideBatching", "make_policy", "POLICIES", "GoRouting",
     "MinLoad", "RoundRobin", "RouterConfig", "InstanceState", "QueuedStub",
     "ROUTERS",

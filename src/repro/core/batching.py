@@ -144,8 +144,11 @@ def evict_for_space(view: SchedView, need_blocks: int,
                     protect: set[int]) -> list[Request]:
     """§4.3 eviction policy: free blocks by evicting requests near the TAIL
     of the (already sorted) queue, sparing ``protect`` (batch members) and
-    requests whose wait is close to the starvation threshold."""
+    requests whose wait is close to the starvation threshold.  Unpinned
+    prefix-cache blocks are reclaimed first — they cost no recompute."""
     evicted: list[Request] = []
+    if view.bm.free_blocks < need_blocks:
+        view.bm.reclaim_cache(need_blocks - view.bm.free_blocks)
     if view.bm.free_blocks >= need_blocks:
         return evicted
     for r in reversed(view.queue):

@@ -24,13 +24,37 @@ Token-resident layout per request is always a CONTIGUOUS PREFIX:
 ``[0, dev_tokens)`` on device, ``[dev_tokens, dev_tokens+host_tokens)`` on
 host; anything beyond was dropped and must be recomputed (it is ordinary
 chunked-prefill work — prompt and generated tokens are all known).
+
+**Prefix-cache accounting.**  With a radix prefix cache attached (see
+``serving/prefix_cache.py`` / the sim cache in ``core/prefix.py``), every
+device block is charged exactly once: blocks uniquely owned by a request
+count in ``used_blocks``; blocks referenced by the cache (shared by any
+number of requests) count in ``cache_charge``.  A request tracks how many
+of its table blocks are cache-charged in ``ReqBlocks.shared_blocks`` so
+release/evict free only the uniquely-owned remainder.  Cache-held blocks
+are reclaimed on demand (``cache.reclaim``) before any request is evicted
+— shared blocks are pinned while in use, so §4.3 offload/evict only ever
+frees uniquely-owned blocks.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Protocol
 
 from .request import Request
+
+
+class PrefixCacheHandle(Protocol):
+    """What the BlockManager needs to know about an attached prefix cache."""
+
+    def reclaim(self, need_blocks: int) -> int:
+        """Evict unpinned cache entries until ``need_blocks`` are freed (or
+        nothing evictable remains); returns blocks actually freed."""
+        ...
+
+    def detach(self, rid: int) -> None:
+        """Unpin every cache node ``rid`` was holding."""
+        ...
 
 
 def blocks_for(tokens: int, block_size: int) -> int:
@@ -44,6 +68,8 @@ class ReqBlocks:
     host_tokens: int = 0    # next contiguous span resident on host
     mirrored_blocks: int = 0  # device blocks already mirrored to host (async offload)
     pending_offload: int = 0  # blocks queued on the D2H lane, not yet complete
+    shared_blocks: int = 0  # table blocks charged to the prefix cache, not
+    # to used_blocks (cache-referenced; possibly shared with other requests)
 
     def computed_tokens(self) -> int:
         return self.dev_tokens + self.host_tokens
@@ -98,6 +124,10 @@ class BlockManager:
         self.h2d = TransferLane(t_block)
         self.table: dict[int, ReqBlocks] = {}
         self.used_blocks = 0
+        # optional radix prefix cache (real or simulated); blocks it holds
+        # are charged here so free_blocks stays truthful for admission.
+        self.cache: Optional[PrefixCacheHandle] = None
+        self.cache_charge = 0
 
     # ------------------------------------------------------------------
     def state(self, req: Request) -> ReqBlocks:
@@ -105,7 +135,7 @@ class BlockManager:
 
     @property
     def free_blocks(self) -> int:
-        return self.num_device_blocks - self.used_blocks
+        return self.num_device_blocks - self.used_blocks - self.cache_charge
 
     def dev_blocks(self, req: Request) -> int:
         return blocks_for(self.state(req).dev_tokens, self.block_size)
@@ -115,10 +145,50 @@ class BlockManager:
         return (blocks_for(s.dev_tokens + new_tokens, self.block_size)
                 - blocks_for(s.dev_tokens, self.block_size))
 
+    # --- prefix-cache hooks ----------------------------------------------
+    def reclaim_cache(self, need_blocks: int) -> int:
+        """Ask the attached cache to free unpinned blocks (LRU/priority)."""
+        if self.cache is None or need_blocks <= 0:
+            return 0
+        return self.cache.reclaim(need_blocks)
+
+    def charge_cache(self, n_blocks: int) -> None:
+        self.cache_charge += n_blocks
+
+    def discharge_cache(self, n_blocks: int) -> None:
+        self.cache_charge -= n_blocks
+
+    def attach_cached(self, req: Request, tokens: int) -> None:
+        """Admission-time prefix-cache hit: the first ``tokens`` (block
+        aligned) are already resident in cache-charged blocks — the request
+        references them without owning them."""
+        s = self.state(req)
+        assert s.dev_tokens == 0 and s.host_tokens == 0, \
+            "attach_cached requires a fresh request"
+        s.dev_tokens = tokens
+        s.shared_blocks = tokens // self.block_size
+
+    def donate_to_cache(self, req: Request, n_blocks: int) -> None:
+        """The cache adopted ``n_blocks`` of req's uniquely-owned blocks
+        (prompt insertion): transfer their charge request -> cache."""
+        s = self.state(req)
+        self.used_blocks -= n_blocks
+        self.cache_charge += n_blocks
+        s.shared_blocks += n_blocks
+
+    def note_fork(self, req: Request) -> None:
+        """A copy-on-write fork replaced one of req's shared blocks with a
+        private copy: the new block is request-owned."""
+        s = self.state(req)
+        s.shared_blocks -= 1
+        self.used_blocks += 1
+
     # --- growth / release ------------------------------------------------
     def grow(self, req: Request, new_tokens: int, now: float) -> bool:
         """Account for new KV written on device; triggers async offload."""
         need = self.blocks_needed_for_growth(req, new_tokens)
+        if need > self.free_blocks:
+            self.reclaim_cache(need - self.free_blocks)
         if need > self.free_blocks:
             return False
         s = self.state(req)
@@ -147,10 +217,16 @@ class BlockManager:
                 s.pending_offload = 0
 
     def release(self, req: Request) -> None:
-        """Request finished: free all its device + host residency."""
+        """Request finished: free its uniquely-owned device + host
+        residency; cache-charged (shared) blocks stay with the cache."""
         s = self.table.pop(req.rid, None)
         if s is not None:
-            self.used_blocks -= blocks_for(s.dev_tokens, self.block_size)
+            self.used_blocks -= (blocks_for(s.dev_tokens, self.block_size)
+                                 - s.shared_blocks)
+        if self.cache is not None:
+            # unconditional: a request can hold cache pins with zero
+            # shared_blocks (its insert found the path already present)
+            self.cache.detach(req.rid)
 
     # --- eviction ----------------------------------------------------------
     def evict(self, req: Request, now: float) -> int:
@@ -165,6 +241,7 @@ class BlockManager:
         nblocks = blocks_for(s.dev_tokens, self.block_size)
         if nblocks == 0 and s.dev_tokens == 0:
             return 0
+        freed = nblocks - s.shared_blocks   # shared blocks stay in the cache
         self.complete_offloads(now)
         if self.recompute_only:
             saved_tokens = 0
@@ -185,8 +262,11 @@ class BlockManager:
             s.host_tokens = saved_tokens                    # gap: suffix dropped
         s.dev_tokens = 0
         s.mirrored_blocks = 0
-        self.used_blocks -= nblocks
-        return nblocks
+        self.used_blocks -= freed
+        s.shared_blocks = 0
+        if self.cache is not None:
+            self.cache.detach(req.rid)
+        return freed
 
     # --- adaptive copy-budget control (§4.3) --------------------------------
     def copy_budget(self, t_fwd_min: float, t_trans_max: float,

@@ -64,6 +64,15 @@ class BatchLatencyEstimator:
         """T~_d(r), Eq. (6)."""
         return self.a_d * l_kv + self.b_d
 
+    def prefill_time_cached(self, prompt_len: int,
+                            cached_tokens: int = 0) -> float:
+        """Prefill cost after a prefix-cache hit: only the uncached suffix
+        is computed, attending over the cached context (Eq. 5 with
+        l_q = prompt - cached, l_kv = cached — the same decomposition that
+        makes the estimator chunked-prefill compatible)."""
+        l_q = max(prompt_len - cached_tokens, 0)
+        return self.prefill_time(l_q, min(cached_tokens, prompt_len))
+
     def request_time(self, l_q: int, l_kv: int, is_prefill: bool) -> float:
         if is_prefill:
             return self.prefill_time(l_q, l_kv)

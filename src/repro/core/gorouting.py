@@ -16,6 +16,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 from .estimator import BatchLatencyEstimator
+from .prefix import usable_prefix
 from .request import Request
 
 
@@ -85,6 +86,11 @@ class RouterConfig:
     pd_mode: str = "coloc"        # "coloc" | "disagg"
     tpot_guard: float = 0.8       # coloc: exclude instance if t̂_d nears TPOT
     hedge_high_priority: bool = False   # straggler mitigation (beyond-paper)
+    # weight on prefill work saved by a prefix-cache hit when comparing
+    # instance load.  > 1 because a hit's savings recur: the prefix stays
+    # warm for future repeats and shared blocks spare pool pressure, so
+    # strict completion-time greedy (== 1) under-values affinity.
+    affinity_bonus: float = 2.0
 
 
 class GoRouting:
@@ -154,22 +160,44 @@ class GoRouting:
     def select(self, req: Request, prefill_pool: list[InstanceState],
                decode_pool: Optional[list[InstanceState]], now: float,
                block_size: int = 16, exec_est: Optional[float] = None,
+               affinity: Optional[dict[int, int]] = None,
                ) -> tuple[Optional[int], Optional[int]]:
-        """Alg. 2: returns (prefill_instance, decode_instance) ids."""
+        """Alg. 2: returns (prefill_instance, decode_instance) ids.
+
+        ``affinity``: optional {iid: cached prefix tokens} from the prefix
+        registry/caches — an instance already holding the request's prefix
+        prefills only the uncached suffix, so its per-instance exec
+        estimate (and hence its incremental gain) improves, and ties in
+        the reservation rule break toward the prefix holder.
+        """
         live = [p for p in prefill_pool if p.alive]
         if not live:
             return None, None
         if exec_est is None:
             exec_est = self.est.prefill_time(req.prompt_len)
-        stub = QueuedStub(req.rid, now, req.priority, req.weight,
-                          req.prompt_len, req.arrival + req.slo.ttft,
-                          exec_est)
+
+        def exec_for(iid: int) -> float:
+            cached = (affinity or {}).get(iid, 0)
+            if cached <= 0:
+                return exec_est
+            cached = usable_prefix(cached, req.prompt_len, block_size)
+            return self.est.prefill_time_cached(req.prompt_len, cached)
+
+        def stub_for(iid: int) -> QueuedStub:
+            return QueuedStub(req.rid, now, req.priority, req.weight,
+                              req.prompt_len, req.arrival + req.slo.ttft,
+                              exec_for(iid))
+
+        # prefill work saved by landing on each instance's cached prefix,
+        # weighted by the recurrence bonus (see RouterConfig.affinity_bonus)
+        save = {p.iid: self.cfg.affinity_bonus
+                * max(0.0, exec_est - exec_for(p.iid)) for p in live}
 
         # lines 2-6: incremental gain per instance
         deltas: dict[int, float] = {}
         for p in live:
             pre = self._gain(p, now, None, block_size)
-            post = self._gain(p, now, stub, block_size)
+            post = self._gain(p, now, stub_for(p.iid), block_size)
             deltas[p.iid] = post - pre
         d_max = max(deltas.values())
 
@@ -190,7 +218,8 @@ class GoRouting:
 
         exec_wo = {p.iid: self._exec_schedule(p, now, None, block_size)[0]
                    for p in cand}
-        exec_w = {p.iid: self._exec_schedule(p, now, stub, block_size)[0]
+        exec_w = {p.iid: self._exec_schedule(p, now, stub_for(p.iid),
+                                             block_size)[0]
                   for p in cand}
 
         if d_max > 0:
@@ -199,17 +228,25 @@ class GoRouting:
             heavy = [p for p in cand if exec_w[p.iid] > self.cfg.lam * ttft]
             heavy_ids = {p.iid for p in heavy}
             non_heavy = [p for p in cand if p.iid not in heavy_ids]
+            # prefix-affinity, reservation-aware: compare light instances on
+            # load NET of the prefill work a cached prefix saves, so a
+            # slightly busier prefix holder still wins; elsewhere affinity
+            # only breaks ties (the anti-over-balancing rule keeps priority).
             if light:                                  # most idle light one
-                pick = min(light, key=lambda p: exec_wo[p.iid])
+                pick = min(light,
+                           key=lambda p: (exec_wo[p.iid] - save[p.iid],
+                                          exec_wo[p.iid]))
             elif non_heavy:                            # HEAVIEST non-heavy:
                 pick = max(non_heavy,                  # reserve light capacity
-                           key=lambda p: exec_wo[p.iid])
+                           key=lambda p: (exec_wo[p.iid], save[p.iid]))
             else:                                      # all heavy: balance
-                pick = min(cand, key=lambda p: exec_wo[p.iid])
+                pick = min(cand,
+                           key=lambda p: (exec_wo[p.iid] - save[p.iid],
+                                          exec_wo[p.iid]))
         else:
             # line 18 fallback: no instance can meet the SLO — min load
             pick = min(live, key=lambda p: self._exec_schedule(
-                p, now, None, block_size)[0])
+                p, now, None, block_size)[0] - save.get(p.iid, 0.0))
 
         d_pick = None
         if decode_pool is not None:
@@ -231,7 +268,7 @@ class MinLoad:
         self.est = est
 
     def select(self, req, prefill_pool, decode_pool, now,
-               block_size=16, exec_est=None):
+               block_size=16, exec_est=None, affinity=None):
         live = [p for p in prefill_pool if p.alive]
         if not live:
             return None, None
@@ -251,7 +288,7 @@ class RoundRobin:
         self._it = itertools.count()
 
     def select(self, req, prefill_pool, decode_pool, now,
-               block_size=16, exec_est=None):
+               block_size=16, exec_est=None, affinity=None):
         live = [p for p in prefill_pool if p.alive]
         if not live:
             return None, None

@@ -52,6 +52,13 @@ class Request:
     weight: float = 1.0          # w_{p(r)} priority weight
     rid: int = field(default_factory=lambda: next(_rid_counter))
     client: int = 0              # originating client id (for VTC fairness)
+    # prefix identity (workload-generator stamped): requests in the same
+    # ``prefix_group`` share their first ``shared_prefix_len`` prompt
+    # tokens.  The real engine matches on token CONTENT (radix cache) and
+    # ignores these; the simulator and trace replay use them to model /
+    # synthesize shared prefixes.  -1 = no shared prefix.
+    prefix_group: int = -1
+    shared_prefix_len: int = 0
 
     # --- mutable serving state -------------------------------------------
     prefilled: int = 0           # prompt tokens whose KV exists on device

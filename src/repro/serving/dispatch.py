@@ -4,10 +4,12 @@ and the asynchronous ``ServiceFrontend``.
 One ``RouterBook`` owns everything GoRouting needs to see about a fleet of
 engine replicas: per-instance :class:`InstanceState` (prefill queue mirror,
 decode counts, free blocks, EWMA speed), the durable request log used for
-failure recovery, and the dispatch step itself (router ``select`` + state
-mutation + logging).  Neither caller touches ``InstanceState`` directly —
-the frontend serialises access with a lock, the controller runs single
-threaded.
+failure recovery, the prefix-affinity registry (which replica has recently
+prefilled which prompt prefix — so repeated prefixes land on the replica
+whose radix cache already holds their KV), and the dispatch step itself
+(router ``select`` + state mutation + logging).  Neither caller touches
+``InstanceState`` directly — the frontend serialises access with a lock,
+the controller runs single threaded.
 """
 from __future__ import annotations
 
@@ -17,32 +19,44 @@ import numpy as np
 
 from ..core.estimator import BatchLatencyEstimator
 from ..core.gorouting import InstanceState, QueuedStub
+from ..core.prefix import PrefixRegistry, chunk_hashes, usable_prefix
 from ..core.request import Request
 
 
 class RouterBook:
     def __init__(self, router, est: BatchLatencyEstimator,
-                 speed_ewma: float = 0.2):
+                 speed_ewma: float = 0.2, *, prefix_affinity: bool = True,
+                 block_size: int = 16):
         self.router = router
         self.est = est
         self.speed_ewma = speed_ewma
         self.states: dict[int, InstanceState] = {}
+        self.registry: Optional[PrefixRegistry] = (
+            PrefixRegistry(block_size) if prefix_affinity else None)
         # durable request log: request + prompt + tokens streamed so far —
         # failover resumes generation exactly where the dead replica stopped.
         self.request_log: dict[int, tuple[Request, np.ndarray, list]] = {}
 
     # --- instance lifecycle -------------------------------------------
     def add_instance(self, iid: int, total_blocks: int,
-                     free_blocks: int) -> InstanceState:
+                     free_blocks: int, *,
+                     has_prefix_cache: bool = True) -> InstanceState:
         st = InstanceState(iid=iid, b_f=free_blocks,
                            total_blocks=total_blocks)
         self.states[iid] = st
+        if not has_prefix_cache:
+            # a cache-less replica joined: affinity claims (cache-discounted
+            # stub costs, prefix-holder tiebreaks) would be false for it, so
+            # turn prefix-affinity routing off for the whole fleet
+            self.registry = None
         return st
 
     def drop_instance(self, iid: int) -> None:
         st = self.states.pop(iid, None)
         if st is not None:
             st.alive = False
+        if self.registry is not None:
+            self.registry.drop(iid)
 
     # --- request log ---------------------------------------------------
     def log_request(self, req: Request, prompt_tokens) -> None:
@@ -57,19 +71,35 @@ class RouterBook:
 
     # --- dispatch ------------------------------------------------------
     def route(self, req: Request, now: float,
-              exec_est: Optional[float] = None) -> Optional[int]:
+              exec_est: Optional[float] = None,
+              prompt_tokens=None) -> Optional[int]:
         """Pick an instance via the router and record the dispatch."""
         pools = list(self.states.values())
         if exec_est is None:
             exec_est = self.est.prefill_time(req.prompt_len)
+        affinity, chain = None, None
+        if self.registry is not None and prompt_tokens is not None:
+            # hash the prompt once; lookup and observe both consume it
+            chain = chunk_hashes(prompt_tokens, self.registry.block_size)
+            affinity = self.registry.lookup(prompt_tokens,
+                                            chain=chain) or None
         iid, _ = self.router.select(req, pools, None, now,
-                                    exec_est=exec_est)
+                                    exec_est=exec_est, affinity=affinity)
         if iid is None:
             return None
+        # the stub mirrors what the replica will actually compute: after a
+        # prefix-cache hit, only the uncached suffix
+        stub_exec = exec_est
+        if affinity and affinity.get(iid):
+            cached = usable_prefix(affinity[iid], req.prompt_len,
+                                   self.registry.block_size)
+            stub_exec = self.est.prefill_time_cached(req.prompt_len, cached)
         self.states[iid].on_dispatch(
             QueuedStub(req.rid, now, req.priority, req.weight,
                        req.prompt_len, req.arrival + req.slo.ttft,
-                       exec_est), now)
+                       stub_exec), now)
+        if self.registry is not None and chain is not None:
+            self.registry.observe(iid, prompt_tokens, chain=chain)
         return iid
 
     # --- event-driven state updates (§4.4 monitoring) ------------------

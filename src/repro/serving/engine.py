@@ -44,6 +44,7 @@ from ..core.request import Phase, Request
 from ..models.model import ArchConfig
 from . import model_exec
 from .kv_pool import PagedKVPool
+from .prefix_cache import RadixPrefixCache
 
 
 @dataclass(frozen=True)
@@ -75,6 +76,9 @@ class EngineStats:
     prefill_tokens: int = 0
     evictions: int = 0
     reload_blocks: int = 0
+    cache_hit_tokens: int = 0      # prompt tokens served from the prefix cache
+    cache_insert_blocks: int = 0   # blocks adopted into the prefix cache
+    cow_forks: int = 0             # copy-on-write forks of shared blocks
     batch_latencies: list = field(default_factory=list)
 
 
@@ -83,7 +87,9 @@ class Engine:
                  policy, *, num_blocks: int = 512, block_size: int = 16,
                  t_block: float = 5e-4, max_ctx: int = 1024,
                  est: Optional[BatchLatencyEstimator] = None,
-                 bm_kwargs: Optional[dict] = None, seed: int = 0):
+                 bm_kwargs: Optional[dict] = None, seed: int = 0,
+                 prefix_cache: bool = True,
+                 cache_blocks: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.eng_cfg = eng_cfg
@@ -92,6 +98,12 @@ class Engine:
         self.pool = PagedKVPool(cfg, num_blocks, block_size)
         self.bm = BlockManager(num_blocks - 1, block_size, t_block,
                                **(bm_kwargs or {}))
+        # radix prefix cache: shares prompt KV across requests (refcounted
+        # blocks, CoW); holds at most ``cache_blocks`` beyond live pins and
+        # yields them back on demand (BlockManager.reclaim_cache).
+        self.cache: Optional[RadixPrefixCache] = (
+            RadixPrefixCache(self.pool, self.bm, max_blocks=cache_blocks)
+            if prefix_cache else None)
         self.est = est or BatchLatencyEstimator(
             a_p=1e-8, b_p=1e-8, c_p=1e-5, a_d=1e-8, b_d=1e-4, t_c=1e-3)
         self.queue: list[Request] = []
@@ -120,7 +132,18 @@ class Engine:
         req.instance = id(self) & 0xffff
         self.queue.append(req)
         self.outputs[req.rid] = list(prior_outputs or [])
-        req._prompt = np.asarray(prompt_tokens, np.int32)  # type: ignore
+        prompt = np.asarray(prompt_tokens, np.int32)
+        req._prompt = prompt  # type: ignore
+        if self.cache is not None:
+            hit, blocks = self.cache.match(prompt, self.now, req.rid,
+                                           req.weight)
+            req.prefilled = hit
+            if hit:
+                # point the table at the cached blocks; only the uncached
+                # suffix remains as (chunked) prefill work
+                self.pool.share(req.rid, blocks)
+                self.bm.attach_cached(req, hit)
+                self.stats.cache_hit_tokens += hit
 
     def has_work(self) -> bool:
         return any(r.phase != Phase.FINISHED for r in self.queue)
@@ -180,6 +203,11 @@ class Engine:
             c = model_exec.bucket(e.n_tokens)
             ctx = e.l_kv
             self.pool.ensure_capacity(r.rid, ctx + e.n_tokens)
+            # CoW guard: the first block written this pass may be shared
+            # (all later blocks are freshly allocated)
+            if self.pool.ensure_writable(r.rid, ctx // self.pool.block_size):
+                self.bm.note_fork(r)
+                self.stats.cow_forks += 1
             toks = np.zeros((1, c), np.int32)
             prompt: np.ndarray = r._prompt  # type: ignore
             seq = np.concatenate([prompt, np.asarray(
@@ -198,6 +226,16 @@ class Engine:
             if done_ctx >= r.prompt_len and r.generated == 0:
                 tok = int(jnp.argmax(logits[0, e.n_tokens - 1]))
                 self._emit(r, tok, emitted)
+                if self.cache is not None:
+                    # adopt the prompt's full blocks into the prefix cache
+                    # (charge moves request -> cache; blocks now shared)
+                    adopted = self.cache.insert(
+                        prompt, self.pool.tables[r.rid], r.rid, self.now,
+                        r.weight)
+                    if adopted:
+                        self.bm.donate_to_cache(r, adopted)
+                        self.stats.cache_insert_blocks += adopted
+                    self.cache.shrink_to_capacity()
             # recompute completion emits nothing (next decode pass does)
 
         # --- decode batch ---------------------------------------------------
@@ -206,6 +244,10 @@ class Engine:
             lens = np.array([e.l_kv for e in decode_entries], np.int32)
             for e in decode_entries:
                 self.pool.ensure_capacity(e.req.rid, e.l_kv + 1)
+                if self.pool.ensure_writable(e.req.rid,
+                                             e.l_kv // self.pool.block_size):
+                    self.bm.note_fork(e.req)
+                    self.stats.cow_forks += 1
             maxp = max(len(self.pool.tables[r]) for r in rids)
             table = self.pool.table_array(rids, maxp=maxp)
             last = np.array(

@@ -190,7 +190,8 @@ class ServiceFrontend:
         with self._lock:
             self.drivers[iid] = driver
             self.book.add_instance(iid, engine.bm.num_device_blocks,
-                                   engine.bm.free_blocks)
+                                   engine.bm.free_blocks,
+                                   has_prefix_cache=engine.cache is not None)
         if self._started:
             driver.start()
         return iid
@@ -217,7 +218,7 @@ class ServiceFrontend:
         _, prompt, partial = logged
         partial = list(partial)
         with self._lock:
-            iid = self.book.route(req, self._now())
+            iid = self.book.route(req, self._now(), prompt_tokens=prompt)
             if iid is None:
                 stream = self._streams.pop(req.rid, None)
                 self.book.forget(req.rid)
@@ -326,9 +327,10 @@ class ServiceFrontend:
         if stamp_arrival:
             req.arrival = now
         stream = RequestStream(req, self._loop)
+        prompt_arr = np.asarray(prompt_tokens, np.int32)
         with self._lock:
-            self.book.log_request(req, prompt_tokens)
-            iid = self.book.route(req, now)
+            self.book.log_request(req, prompt_arr)
+            iid = self.book.route(req, now, prompt_tokens=prompt_arr)
             if iid is None:
                 self.book.forget(req.rid)
                 self._release_slot(req)
@@ -338,7 +340,7 @@ class ServiceFrontend:
             self._reqs[req.rid] = req
             self._rid_iid[req.rid] = iid
             driver = self.drivers[iid]
-        driver.submit(req, np.asarray(prompt_tokens, np.int32))
+        driver.submit(req, prompt_arr)
         return stream
 
     # --- event sink (driver threads) ---------------------------------------

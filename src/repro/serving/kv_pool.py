@@ -2,8 +2,14 @@
 
 Layout: one device array ``(L, 2, num_blocks, block_size, Hkv, hd)``
 (k=0 / v=1), addressed through per-request block tables.  The host pool
-holds offloaded/mirrored block contents as numpy arrays keyed by
-(rid, block_index) — the §4.3 asynchronous-offload target.
+holds offloaded/mirrored block contents as numpy arrays keyed per request
+— the §4.3 asynchronous-offload target.
+
+Physical blocks are REFERENCE COUNTED so several block tables (and the
+radix prefix cache, ``serving/prefix_cache.py``) can point at the same
+device block: ``share`` appends existing blocks to another request's table,
+``fork`` implements copy-on-write for writes into a shared block, and a
+block returns to the free list only when its last reference drops.
 
 The pool is DATA only; residency accounting/eviction policy lives in
 core/blocks.BlockManager (shared with the simulator), keeping policy and
@@ -11,7 +17,7 @@ mechanism separate.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -31,8 +37,11 @@ class PagedKVPool:
              cfg.hd), dtype)
         self.free: list[int] = list(range(num_blocks - 1, 0, -1))
         # block 0 is reserved as the null page block tables pad with
+        self.refcount: list[int] = [0] * num_blocks
+        self.refcount[0] = 1                      # null page never freed
         self.tables: dict[int, list[int]] = {}
-        self.host: dict[tuple[int, int], np.ndarray] = {}
+        # host mirror, keyed rid -> {logical block index -> contents}
+        self.host: dict[int, dict[int, np.ndarray]] = {}
 
     # --- allocation ------------------------------------------------------
     def alloc(self, rid: int, n: int) -> bool:
@@ -40,7 +49,9 @@ class PagedKVPool:
             return False
         t = self.tables.setdefault(rid, [])
         for _ in range(n):
-            t.append(self.free.pop())
+            b = self.free.pop()
+            self.refcount[b] = 1
+            t.append(b)
         return True
 
     def ensure_capacity(self, rid: int, tokens: int) -> bool:
@@ -50,8 +61,8 @@ class PagedKVPool:
 
     def release(self, rid: int) -> None:
         for b in self.tables.pop(rid, []):
-            self.free.append(b)
-        self.host = {k: v for k, v in self.host.items() if k[0] != rid}
+            self.decref(b)
+        self.host.pop(rid, None)
 
     def table_array(self, rids: list[int], maxp: Optional[int] = None):
         maxp = maxp or max(len(self.tables[r]) for r in rids)
@@ -61,35 +72,88 @@ class PagedKVPool:
             out[i, :len(t)] = t
         return jnp.asarray(out)
 
+    # --- sharing / copy-on-write -----------------------------------------
+    def incref(self, block: int) -> None:
+        self.refcount[block] += 1
+
+    def decref(self, block: int) -> None:
+        """Drop one reference; the block is freed when none remain."""
+        self.refcount[block] -= 1
+        if self.refcount[block] == 0:
+            self.free.append(block)
+
+    def share(self, rid: int, blocks: Sequence[int]) -> None:
+        """Point rid's table at existing physical ``blocks`` (prefix-cache
+        hit): each gains a reference instead of being allocated."""
+        t = self.tables.setdefault(rid, [])
+        for b in blocks:
+            self.incref(b)
+            t.append(b)
+
+    def shared_with(self, rid: int) -> int:
+        """Blocks in rid's table whose physical block has other referents."""
+        return sum(1 for b in self.tables.get(rid, [])
+                   if self.refcount[b] > 1)
+
+    def fork(self, rid: int, logical: int) -> int:
+        """Copy-on-write: give rid a private copy of logical block
+        ``logical``.  Returns the new physical block id."""
+        t = self.tables[rid]
+        old = t[logical]
+        if not self.free:
+            raise RuntimeError("fork: no free block for copy-on-write")
+        new = self.free.pop()
+        self.refcount[new] = 1
+        self.kv = self.kv.at[:, :, new].set(self.kv[:, :, old])
+        t[logical] = new
+        self.decref(old)
+        return new
+
+    def ensure_writable(self, rid: int, logical: int) -> bool:
+        """CoW guard before writing into rid's ``logical`` block: fork the
+        block iff it is physically shared.  Returns True if forked."""
+        t = self.tables.get(rid, ())
+        if logical >= len(t) or self.refcount[t[logical]] <= 1:
+            return False
+        self.fork(rid, logical)
+        return True
+
     # --- host offload / reload (§4.3 mechanism) ---------------------------
     def offload_blocks(self, rid: int, block_indices: list[int]) -> None:
         """Copy listed LOGICAL blocks of rid to host (async mirror)."""
         t = self.tables[rid]
+        h = self.host.setdefault(rid, {})
         for bi in block_indices:
             blk = jax.device_get(self.kv[:, :, t[bi]])
-            self.host[(rid, bi)] = np.asarray(blk)
+            h[bi] = np.asarray(blk)
 
     def drop_device_blocks(self, rid: int) -> None:
-        """Free rid's device blocks (eviction); host copies survive."""
+        """Drop rid's device references (eviction); shared physical blocks
+        survive under their remaining referents, host copies survive."""
         for b in self.tables.get(rid, []):
-            self.free.append(b)
+            self.decref(b)
         self.tables[rid] = []
 
     def reload_blocks(self, rid: int, n_blocks: int) -> int:
         """Restore the first n host blocks of rid to fresh device blocks.
-        Returns tokens restored.  Pipelined layer-wise on TPU; on CPU the
-        copies are synchronous but accounted by the BlockManager lanes."""
-        restored = 0
+        Returns tokens restored.  All restores land in ONE batched scatter
+        (pipelined layer-wise on TPU; on CPU the copy is synchronous but
+        accounted by the BlockManager lanes)."""
+        h = self.host.get(rid, {})
+        restorable = []
         for bi in range(n_blocks):
-            key = (rid, bi)
-            if key not in self.host:
+            if bi not in h or not self.alloc(rid, 1):
                 break
-            if not self.alloc(rid, 1):
-                break
-            b = self.tables[rid][-1]
-            self.kv = self.kv.at[:, :, b].set(jnp.asarray(self.host[key]))
-            restored += 1
-        return restored * self.block_size
+            restorable.append((self.tables[rid][-1], h[bi]))
+        if not restorable:
+            return 0
+        dst = jnp.asarray([b for b, _ in restorable], jnp.int32)
+        # host blocks are (L, 2, bs, Hkv, hd); stack -> (n, L, 2, ...) and
+        # move the block axis behind (L, 2) to match self.kv's layout
+        data = jnp.moveaxis(
+            jnp.asarray(np.stack([blk for _, blk in restorable])), 0, 2)
+        self.kv = self.kv.at[:, :, dst].set(data)
+        return len(restorable) * self.block_size
 
     def host_blocks(self, rid: int) -> int:
-        return sum(1 for k in self.host if k[0] == rid)
+        return len(self.host.get(rid, ()))

@@ -65,7 +65,8 @@ class ServiceController:
         iid = next(self._iid)
         self.engines[iid] = engine
         self.book.add_instance(iid, engine.bm.num_device_blocks,
-                               engine.bm.free_blocks)
+                               engine.bm.free_blocks,
+                               has_prefix_cache=engine.cache is not None)
         return iid
 
     def remove_instance(self, iid: int, *, drain: bool = True) -> None:
@@ -101,7 +102,7 @@ class ServiceController:
                ) -> Optional[int]:
         if _relog:
             self.book.log_request(req, prompt_tokens)
-        iid = self.book.route(req, self.now)
+        iid = self.book.route(req, self.now, prompt_tokens=prompt_tokens)
         if iid is None:
             return None
         self.engines[iid].add_request(req, prompt_tokens,

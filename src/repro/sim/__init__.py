@@ -7,7 +7,8 @@ from .engine_sim import DecodeAllPolicy, EngineSim, StepResult
 from .cluster import ClusterConfig, ClusterSim, HANDOFF_DELAY
 from .workloads import WORKLOADS, WorkloadSpec
 from .metrics import Summary, summarize, gain_timeline, urgent_timeout_timeline
-from .replay import ReplayReport, clip_lengths, replay_frontend, replay_sim
+from .replay import (ReplayReport, clip_lengths, replay_frontend,
+                     replay_sim, synth_prompt)
 
 __all__ = [
     "AnalyticalExecutor", "InstanceHardware", "ModelProfile", "QWEN2_7B",
@@ -16,5 +17,5 @@ __all__ = [
     "ClusterConfig", "ClusterSim", "HANDOFF_DELAY", "WORKLOADS",
     "WorkloadSpec", "Summary", "summarize", "gain_timeline",
     "urgent_timeout_timeline", "ReplayReport", "clip_lengths",
-    "replay_frontend", "replay_sim",
+    "replay_frontend", "replay_sim", "synth_prompt",
 ]

@@ -40,6 +40,12 @@ class ClusterConfig:
     heartbeat_interval: float = 0.5  # b_f refresh period (s)
     heartbeat_timeout: float = 2.0   # declare dead after silence (unused in
                                      # sim — kills are explicit — kept for API)
+    # per-instance prefix cache (sim model of serving/prefix_cache.py) +
+    # prefix-affinity routing.  Only requests stamped with a
+    # ``prefix_group`` participate, so workloads without shared prefixes
+    # behave identically with this on or off.
+    prefix_cache: bool = True
+    cache_frac: float = 0.25         # cap: fraction of device blocks
 
 
 class ClusterSim:
@@ -78,8 +84,15 @@ class ClusterSim:
             if self.ccfg.pd_mode == "disagg":
                 from dataclasses import replace
                 cfg = replace(cfg, pd_mode="prefill")
+            cache = None
+            if self.ccfg.prefix_cache:
+                from ..core.prefix import SimPrefixCache
+                cache = SimPrefixCache(
+                    self.executor.block_size,
+                    max(1, int(self.executor.num_blocks
+                               * self.ccfg.cache_frac)))
             eng = EngineSim(iid, self.make_policy_fn(), self.executor,
-                            self.est, cfg, bm)
+                            self.est, cfg, bm, prefix_cache=cache)
             self.engines[iid] = eng
             self.states[iid] = InstanceState(
                 iid=iid, b_f=bm.num_device_blocks,
@@ -144,12 +157,22 @@ class ClusterSim:
         dpool = (list(self.decode_states.values())
                  if self.ccfg.pd_mode == "disagg" else None)
         exec_est = self.est.prefill_time(req.prompt_len)
+        # prefix affinity: cached tokens usable by this request, per replica
+        affinity = None
+        if self.ccfg.prefix_cache and req.prefix_group >= 0:
+            affinity = {iid: eng.prefix_cache.peek_tokens(req)
+                        for iid, eng in self.engines.items()
+                        if eng.prefix_cache is not None} or None
         p_iid, d_iid = self.router.select(
             req, pools, dpool, now,
-            block_size=self.executor.block_size, exec_est=exec_est)
+            block_size=self.executor.block_size, exec_est=exec_est,
+            affinity=affinity)
         if p_iid is None:
             self.dropped.append(req)
             return
+        if affinity and affinity.get(p_iid):
+            exec_est = self.est.prefill_time_cached(
+                req.prompt_len, affinity[p_iid])
         st = self.states[p_iid]
         st.on_dispatch(QueuedStub(req.rid, now, req.priority, req.weight,
                                   req.prompt_len,

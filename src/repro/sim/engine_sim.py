@@ -22,6 +22,7 @@ from ..core.batching import (BatchPlan, EngineConfig, SchedView,
                              compute_remaining)
 from ..core.blocks import BlockManager
 from ..core.estimator import BatchLatencyEstimator
+from ..core.prefix import SimPrefixCache
 from ..core.request import Phase, Request
 from .executor import AnalyticalExecutor
 
@@ -64,7 +65,8 @@ class DecodeAllPolicy:
 class EngineSim:
     def __init__(self, iid: int, policy, executor: AnalyticalExecutor,
                  est: BatchLatencyEstimator, cfg: EngineConfig,
-                 bm: Optional[BlockManager] = None):
+                 bm: Optional[BlockManager] = None,
+                 prefix_cache: Optional[SimPrefixCache] = None):
         self.iid = iid
         self.policy = policy
         self.executor = executor
@@ -73,17 +75,28 @@ class EngineSim:
         self.bm = bm or BlockManager(executor.num_blocks,
                                      executor.block_size, executor.t_block,
                                      beta=cfg.beta)
+        self.prefix_cache = prefix_cache
+        if prefix_cache is not None:
+            prefix_cache.bm = self.bm
+            self.bm.cache = prefix_cache
         self.queue: list[Request] = []
         self.busy_until = 0.0
         self.idle = True
         self.alive = True
         self.iterations = 0
+        self.prefill_tokens = 0    # prompt/recompute tokens actually computed
         self.batch_log: list[tuple[float, int, float]] = []  # (t, n, latency)
 
     # ------------------------------------------------------------------
     def add_request(self, req: Request, now: float) -> None:
         req.instance = self.iid
         self.queue.append(req)
+        if self.prefix_cache is not None:
+            hit = self.prefix_cache.match(req, now)
+            req.prefilled = hit
+            if hit:
+                self.bm.attach_cached(req, hit)
+                self.prefix_cache.attach(req.rid, req.prefix_group)
 
     def has_work(self) -> bool:
         return any(r.phase != Phase.FINISHED for r in self.queue)
@@ -124,6 +137,7 @@ class EngineSim:
             r = e.req
             s = self.bm.state(r)
             if e.is_prefill:
+                self.prefill_tokens += e.n_tokens
                 # the pass that brings residency to prompt_len produces the
                 # first token; recompute passes for resumed decodes emit
                 # nothing (their next decode pass does).
@@ -131,6 +145,11 @@ class EngineSim:
                     r.emit_token(end)
                     res.emitted.append(r)
                     res.prefill_done.append(r)
+                    if self.prefix_cache is not None:
+                        adopted = self.prefix_cache.insert(r, end)
+                        if adopted:
+                            self.bm.donate_to_cache(r, adopted)
+                        self.prefix_cache.shrink_to_capacity()
             else:
                 r.emit_token(end)
                 res.emitted.append(r)

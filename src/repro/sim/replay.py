@@ -8,6 +8,13 @@ the real JAX engine: the identical request trace (arrivals, lengths,
 priorities, SLOs) can be pushed through ``ClusterSim`` (instant, analytic)
 and through ``ServiceFrontend`` (wall clock, real continuous batching,
 client-edge latency), and the two ``ReplayReport``s compared row-for-row.
+
+CLI (see docs/WORKLOADS.md for the full schema and report columns):
+
+    PYTHONPATH=src python -m repro.sim.replay --workload shared_prefix \\
+        --mode sim --rate 40 --duration 6
+    PYTHONPATH=src python -m repro.sim.replay --workload industrial \\
+        --mode frontend --speed 200 --replicas 2
 """
 from __future__ import annotations
 
@@ -47,15 +54,81 @@ def clip_lengths(requests: Iterable[Request], *, max_in: int = 64,
                  max_out: int = 8, slo: Optional[SLO] = None,
                  ) -> list[Request]:
     """Shrink a paper-scale trace to something a tiny smoke model can chew
-    in seconds, preserving arrivals / priorities / weights / clients."""
+    in seconds, preserving arrivals / priorities / weights / clients and
+    the shared-prefix identity (the shared span clips with the prompt)."""
     out = []
     for r in requests:
+        prompt_len = min(r.prompt_len, max_in)
         out.append(Request(
-            prompt_len=min(r.prompt_len, max_in),
+            prompt_len=prompt_len,
             output_len=max(1, min(r.output_len, max_out)),
             arrival=r.arrival, slo=slo or r.slo,
-            priority=r.priority, weight=r.weight, client=r.client))
+            priority=r.priority, weight=r.weight, client=r.client,
+            prefix_group=r.prefix_group,
+            shared_prefix_len=min(r.shared_prefix_len, prompt_len)))
     return out
+
+
+def synth_prompt(req: Request, vocab: int, rng: np.random.Generator,
+                 seed: int = 0) -> np.ndarray:
+    """Token content for a trace request: requests in the same
+    ``prefix_group`` get byte-identical shared prefixes (deterministic in
+    ``seed``+group), so the engine-side radix cache sees real shared
+    content; the suffix is unique per request."""
+    n_pre = min(req.shared_prefix_len, req.prompt_len) \
+        if req.prefix_group >= 0 else 0
+    parts = []
+    if n_pre > 0:
+        g = np.random.default_rng([seed, req.prefix_group])
+        parts.append(g.integers(1, vocab, n_pre))
+    if req.prompt_len - n_pre > 0:
+        parts.append(rng.integers(1, vocab, req.prompt_len - n_pre))
+    return np.concatenate(parts).astype(np.int32)
+
+
+def smoke_frontend(replicas: int = 2, *, prefix_cache: bool = True,
+                   router: str = "gorouting", sched: str = "slidebatching",
+                   w_p: float = 4.0, max_inflight: int = 4096):
+    """The smoke-scale live serving stack (tiny model, refcounted paged KV,
+    radix prefix cache) shared by ``examples/shared_prefix.py``, the
+    ``replay_shared_prefix`` benchmark and the CLI below — one definition,
+    so all three measure the same configuration.  Imports JAX lazily;
+    returns ``(frontend, model_cfg)``."""
+    import jax
+
+    from ..configs import get_smoke
+    from ..core import (BatchLatencyEstimator, EngineConfig, GoRouting,
+                        MinLoad, RoundRobin, RouterConfig, make_policy)
+    from ..models import init_params
+    from ..serving import Engine, FrontendConfig, ServiceFrontend
+
+    cfg = get_smoke("qwen1_5_0_5b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    est = BatchLatencyEstimator(a_p=1e-8, b_p=1e-8, c_p=1e-4, a_d=1e-8,
+                                b_d=1e-3, t_c=1e-2)
+    make_router = {"gorouting": lambda: GoRouting(
+                       est, RouterConfig(pd_mode="coloc")),
+                   "min_load": lambda: MinLoad(est),
+                   "round_robin": lambda: RoundRobin()}[router]
+    fe = ServiceFrontend(make_router(), est,
+                         FrontendConfig(max_inflight=max_inflight))
+    for _ in range(replicas):
+        fe.add_instance(Engine(
+            cfg, params, EngineConfig(eta=1.0, w_p=w_p, tau=1e9),
+            make_policy(sched), num_blocks=192, block_size=16,
+            max_ctx=256, prefix_cache=prefix_cache))
+    return fe, cfg
+
+
+def smoke_shared_prefix_trace(n: int, max_out: int = 2) -> list[Request]:
+    """The canonical smoke-scale shared-prefix trace: 80% of ``n`` streams
+    share one of 2 system prompts (32 tokens = 2 KV blocks), clipped to
+    smoke-model lengths."""
+    from .workloads import shared_prefix
+    trace = shared_prefix(rate=n / 2.0, duration=8.0, seed=3, n_groups=2,
+                          prefix_len=32, p_shared=0.8)[:n]
+    return clip_lengths(trace, max_in=48, max_out=max_out,
+                        slo=SLO(ttft=90.0, tpot=15.0))
 
 
 async def replay_frontend(frontend, requests: Iterable[Request], vocab: int,
@@ -89,8 +162,10 @@ async def replay_frontend(frontend, requests: Iterable[Request], vocab: int,
             prompt_len=src.prompt_len, output_len=src.output_len,
             arrival=0.0,
             slo=SLO(src.slo.ttft * slo_scale, src.slo.tpot * slo_scale),
-            priority=src.priority, weight=src.weight, client=src.client)
-        prompt = rng.integers(1, vocab, src.prompt_len).astype(np.int32)
+            priority=src.priority, weight=src.weight, client=src.client,
+            prefix_group=src.prefix_group,
+            shared_prefix_len=src.shared_prefix_len)
+        prompt = synth_prompt(src, vocab, rng, seed=seed)
         try:
             stream = await frontend.submit(req, prompt, wait=wait)
         except AdmissionError:
@@ -120,3 +195,96 @@ def replay_sim(cluster, requests: list[Request], *, w_p: float = 1.0,
         summary=summarize(requests, w_p=w_p, w_d=w_d),
         n_submitted=len(requests), n_completed=done,
         n_rejected=len(cluster.dropped), wall=wall, speed=float("inf"))
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+def _main(argv: Optional[list] = None) -> None:
+    import argparse
+    import json
+    import math
+
+    from .workloads import WORKLOADS
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.sim.replay",
+        description="Replay a workload trace in simulated time (ClusterSim)"
+                    " or scaled wall-clock time (async ServiceFrontend over"
+                    " real smoke-scale JAX engines).")
+    ap.add_argument("--workload", choices=sorted(WORKLOADS),
+                    default="sharegpt")
+    ap.add_argument("--mode", choices=["sim", "frontend"], default="sim")
+    ap.add_argument("--rate", type=float, default=40.0,
+                    help="arrivals per second of trace time")
+    ap.add_argument("--duration", type=float, default=6.0,
+                    help="trace length in seconds")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--router", default="gorouting",
+                    choices=["gorouting", "min_load", "round_robin"])
+    ap.add_argument("--sched", default="slidebatching")
+    ap.add_argument("--w-p", type=float, default=4.0,
+                    help="first-token gain weight")
+    ap.add_argument("--no-prefix-cache", action="store_true")
+    ap.add_argument("--speed", type=float, default=200.0,
+                    help="frontend mode: trace-time compression (200 = "
+                         "replay 200x faster than the trace)")
+    ap.add_argument("--max-in", type=int, default=48,
+                    help="frontend mode: clip prompts to smoke-model size")
+    ap.add_argument("--max-out", type=int, default=4,
+                    help="frontend mode: clip outputs")
+    args = ap.parse_args(argv)
+
+    from ..core import (EngineConfig, GoRouting, MinLoad, RoundRobin,
+                        RouterConfig, make_policy)
+
+    reqs = WORKLOADS[args.workload](rate=args.rate, duration=args.duration,
+                                    seed=args.seed)
+    if args.mode == "sim":
+        from .cluster import ClusterConfig, ClusterSim
+        from .executor import (AnalyticalExecutor, InstanceHardware,
+                               QWEN2_7B)
+        ex = AnalyticalExecutor(QWEN2_7B, InstanceHardware(chips=4))
+        est, _ = ex.fit_estimator(n=200)
+        router = {"gorouting": lambda: GoRouting(
+                      est, RouterConfig(pd_mode="coloc")),
+                  "min_load": lambda: MinLoad(est),
+                  "round_robin": lambda: RoundRobin()}[args.router]()
+        cs = ClusterSim(lambda: make_policy(args.sched), router, ex, est,
+                        EngineConfig(w_p=args.w_p),
+                        ClusterConfig(pd_mode="coloc",
+                                      n_prefill=args.replicas,
+                                      prefix_cache=not args.no_prefix_cache))
+        rep = replay_sim(cs, reqs, w_p=args.w_p)
+        extra = {"prefill_tokens": sum(e.prefill_tokens
+                                       for e in cs.engines.values())}
+    else:
+        fe, cfg = smoke_frontend(args.replicas,
+                                 prefix_cache=not args.no_prefix_cache,
+                                 router=args.router, sched=args.sched,
+                                 w_p=args.w_p)
+        trace = clip_lengths(reqs, max_in=args.max_in, max_out=args.max_out,
+                             slo=SLO(ttft=90.0, tpot=15.0))
+
+        async def go():
+            await fe.start()
+            rep = await replay_frontend(fe, trace, cfg.vocab,
+                                        speed=args.speed, w_p=args.w_p)
+            await fe.stop()
+            return rep
+
+        rep = asyncio.run(go())
+        engines = list(fe.engines.values())
+        extra = {"prefill_tokens": sum(e.stats.prefill_tokens
+                                       for e in engines),
+                 "cache_hit_tokens": sum(e.stats.cache_hit_tokens
+                                         for e in engines)}
+    row = {k: (None if isinstance(v, float) and not math.isfinite(v) else v)
+           for k, v in {**rep.row(), **extra}.items()}  # inf -> valid JSON
+    print(json.dumps(row, indent=1))
+
+
+if __name__ == "__main__":
+    _main()

@@ -186,10 +186,46 @@ def industrial(rate: float, duration: float, seed: int = 0,
     return reqs
 
 
+def shared_prefix(rate: float, duration: float, seed: int = 0,
+                  spec: Optional[WorkloadSpec] = None, *,
+                  n_groups: int = 4, prefix_len: int = 512,
+                  p_shared: float = 0.8,
+                  suffix_mean: float = 96.0) -> list[Request]:
+    """Shared-system-prompt workload (multi-turn chat / agent loops /
+    few-shot templates): a ``p_shared`` fraction of requests draws one of
+    ``n_groups`` common system prompts of ``prefix_len`` tokens followed by
+    a unique lognormal suffix; the rest are fully unique.  Requests are
+    stamped with ``prefix_group`` / ``shared_prefix_len`` so the simulator
+    can model cache hits and the trace replayer can synthesize
+    byte-identical prefixes for the real radix cache."""
+    spec = spec or WorkloadSpec("shared_prefix", mean_in=prefix_len + 96,
+                                mean_out=160)
+    rng = np.random.default_rng(seed)
+    n = max(1, int(rate * duration * 1.2))
+    gaps = rng.exponential(1.0 / rate, size=n)
+    arrivals = np.cumsum(gaps)
+    arrivals = arrivals[arrivals < duration]
+    n = len(arrivals)
+    shared = rng.random(n) < p_shared
+    groups = rng.integers(0, n_groups, size=n)
+    suffix = _lognormal_lengths(rng, suffix_mean, 0.8, 8, 2048, n)
+    in_lens = np.where(shared, prefix_len + suffix,
+                       _lognormal_lengths(rng, spec.mean_in, 0.9, 8, 4096, n))
+    out_lens = _lognormal_lengths(rng, spec.mean_out, 0.9, 4, 1024, n)
+    prio, wts = _assign_priority(rng, spec, n)
+    reqs = _build(arrivals, in_lens, out_lens, prio, wts, spec, rng=rng)
+    for i, r in enumerate(reqs):
+        if shared[i]:
+            r.prefix_group = int(groups[i])
+            r.shared_prefix_len = prefix_len
+    return reqs
+
+
 WORKLOADS: dict[str, Callable] = {
     "sharegpt": sharegpt,
     "azure": azure,
     "burstgpt": burstgpt,
     "qwentrace": qwentrace,
     "industrial": industrial,
+    "shared_prefix": shared_prefix,
 }

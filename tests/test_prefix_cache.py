@@ -1,0 +1,424 @@
+"""Prefix-cache invariants: pool refcount / copy-on-write conservation,
+radix matching, eviction safety (never frees a block with >1 reference),
+shared-table attention exactness, and router prefix-affinity scoring."""
+import numpy as np
+import pytest
+
+from repro.core import (BatchLatencyEstimator, BlockManager, EngineConfig,
+                        GoRouting, InstanceState, PrefixRegistry, Request,
+                        RouterConfig, SLO, SimPrefixCache, make_policy)
+from repro.core.prefix import usable_prefix
+
+RNG = np.random.default_rng(7)
+
+
+def make_req(plen=100, prio=1, group=-1, shared=0):
+    return Request(prompt_len=plen, output_len=10, arrival=0.0,
+                   slo=SLO(3600.0, 3600.0), priority=prio,
+                   prefix_group=group, shared_prefix_len=shared)
+
+
+# --- PagedKVPool: refcounts + copy-on-write ---------------------------------
+
+@pytest.fixture(scope="module")
+def pool_cls():
+    from repro.configs import get_smoke
+    from repro.serving import PagedKVPool
+
+    cfg = get_smoke("qwen1_5_0_5b")
+
+    def make(num_blocks=32, block_size=16):
+        return PagedKVPool(cfg, num_blocks, block_size)
+    return make
+
+
+def pool_invariant(pool):
+    """Every non-reserved block is free xor referenced; refcounts of
+    table-referenced blocks are consistent."""
+    free = set(pool.free)
+    for b in range(1, pool.num_blocks):
+        refs = sum(t.count(b) for t in pool.tables.values())
+        if b in free:
+            assert pool.refcount[b] == 0, f"free block {b} has references"
+        else:
+            assert pool.refcount[b] >= refs > 0 or pool.refcount[b] > 0
+    assert len(free) == len(pool.free), "free list has duplicates"
+
+
+def test_pool_alloc_share_release_conservation(pool_cls):
+    pool = pool_cls()
+    total_free = len(pool.free)
+    assert pool.alloc(rid=1, n=4)
+    pool.share(rid=2, blocks=pool.tables[1][:3])   # rid 2 shares 3 blocks
+    assert [pool.refcount[b] for b in pool.tables[1]] == [2, 2, 2, 1]
+    pool_invariant(pool)
+    pool.release(1)                      # shared blocks survive under rid 2
+    assert len(pool.free) == total_free - 3
+    assert all(pool.refcount[b] == 1 for b in pool.tables[2])
+    pool_invariant(pool)
+    pool.release(2)
+    assert len(pool.free) == total_free
+    pool_invariant(pool)
+
+
+def test_pool_cow_fork_preserves_sharing(pool_cls):
+    pool = pool_cls()
+    assert pool.alloc(1, 2)
+    pool.share(2, pool.tables[1])
+    shared_b = pool.tables[2][0]
+    assert not pool.ensure_writable(1, 5)          # out of range: no-op
+    assert pool.ensure_writable(2, 0)              # shared -> forked
+    assert pool.tables[2][0] != shared_b
+    assert pool.refcount[shared_b] == 1            # rid 1 keeps the original
+    assert pool.refcount[pool.tables[2][0]] == 1
+    assert not pool.ensure_writable(2, 0)          # already private
+    pool_invariant(pool)
+    # forked block holds a faithful copy of the original's KV
+    import jax.numpy as jnp
+    assert bool(jnp.array_equal(pool.kv[:, :, shared_b],
+                                pool.kv[:, :, pool.tables[2][0]]))
+
+
+def test_pool_random_alloc_share_fork_release(pool_cls):
+    pool = pool_cls(num_blocks=64)
+    rng = np.random.default_rng(0)
+    live = []
+    for step in range(300):
+        op = rng.random()
+        if op < 0.4 or not live:
+            rid = 1000 + step
+            if pool.alloc(rid, int(rng.integers(1, 4))):
+                live.append(rid)
+        elif op < 0.6 and live:
+            src = int(rng.choice(live))
+            rid = 2000 + step
+            k = int(rng.integers(1, len(pool.tables[src]) + 1))
+            pool.share(rid, pool.tables[src][:k])
+            live.append(rid)
+        elif op < 0.8 and live:
+            rid = int(rng.choice(live))
+            t = pool.tables.get(rid, [])
+            if t and pool.free:
+                pool.ensure_writable(rid, int(rng.integers(0, len(t))))
+        else:
+            rid = live.pop(int(rng.integers(0, len(live))))
+            pool.release(rid)
+        pool_invariant(pool)
+    for rid in live:
+        pool.release(rid)
+    assert len(pool.free) == 63                    # block 0 reserved
+
+
+def test_pool_reload_batched_roundtrip(pool_cls):
+    """Offload -> drop -> reload restores byte-identical KV (single
+    scatter path) and host state survives O(1) release of other rids."""
+    import jax.numpy as jnp
+    pool = pool_cls()
+    assert pool.alloc(1, 3)
+    pool.kv = pool.kv.at[:, :, pool.tables[1]].set(1.5)
+    before = [np.asarray(pool.kv[:, :, b]) for b in pool.tables[1]]
+    pool.offload_blocks(1, [0, 1, 2])
+    assert pool.host_blocks(1) == 3
+    pool.drop_device_blocks(1)
+    pool.alloc(9, 1)                     # unrelated rid
+    pool.release(9)                      # must not disturb rid 1's host set
+    assert pool.host_blocks(1) == 3
+    assert pool.reload_blocks(1, 3) == 3 * pool.block_size
+    for want, b in zip(before, pool.tables[1]):
+        assert bool(jnp.array_equal(jnp.asarray(want), pool.kv[:, :, b]))
+
+
+# --- RadixPrefixCache --------------------------------------------------------
+
+@pytest.fixture()
+def cache_env(pool_cls):
+    from repro.serving import RadixPrefixCache
+
+    pool = pool_cls(num_blocks=64)
+    bm = BlockManager(63, 16, 1e-3)
+    cache = RadixPrefixCache(pool, bm, max_blocks=32)
+    return pool, bm, cache
+
+
+def _prefill(pool, rid, tokens):
+    """Pretend rid prefilled ``tokens``: allocate covering blocks."""
+    assert pool.ensure_capacity(rid, len(tokens))
+    return pool.tables[rid]
+
+
+def test_radix_match_block_aligned_and_capped(cache_env):
+    pool, bm, cache = cache_env
+    toks = RNG.integers(1, 999, 80).astype(np.int32)
+    _prefill(pool, 1, toks)
+    assert cache.insert(toks, pool.tables[1], rid=1, now=0.0) == 5
+    # identical prompt: matches all FULL blocks except it must leave >= 1
+    # token to prefill -> 80 tokens = 5 blocks, cap at 79 -> 4 blocks
+    n, blocks = cache.match(toks, now=1.0, rid=2)
+    assert n == 64 and blocks == pool.tables[1][:4]
+    # diverging after 2 blocks: matches exactly the shared 2 blocks
+    other = toks.copy()
+    other[40] += 1
+    n2, blocks2 = cache.match(other, now=1.0, rid=3)
+    assert n2 == 32 and blocks2 == pool.tables[1][:2]
+    # short prompt never matches (nothing would remain to prefill)
+    assert cache.match(toks[:16], now=1.0, rid=4)[0] == 0
+
+
+def test_radix_insert_splits_and_adopts_suffix_only(cache_env):
+    pool, bm, cache = cache_env
+    a = RNG.integers(1, 999, 64).astype(np.int32)
+    b = np.concatenate([a[:32], RNG.integers(1, 999, 32)]).astype(np.int32)
+    _prefill(pool, 1, a)
+    _prefill(pool, 2, b)
+    assert cache.insert(a, pool.tables[1], rid=1, now=0.0) == 4
+    bm.charge_cache(4)
+    # b shares 2 blocks with a -> splits a's node, adopts only b's suffix
+    assert cache.insert(b, pool.tables[2], rid=2, now=0.0) == 2
+    bm.charge_cache(2)
+    assert cache.cached_blocks == 6
+    n, blocks = cache.match(b, now=1.0, rid=3)
+    assert n == 48                       # 2 shared + 1 of b's own (cap 63)
+    assert blocks[:2] == pool.tables[1][:2]
+    assert blocks[2] == pool.tables[2][2]
+
+
+def test_radix_eviction_never_frees_shared_or_pinned(cache_env):
+    pool, bm, cache = cache_env
+    toks = RNG.integers(1, 999, 64).astype(np.int32)
+    _prefill(pool, 1, toks)
+    adopted = cache.insert(toks, pool.tables[1], rid=1, now=0.0)
+    bm.charge_cache(adopted)
+    # rid 1 still references the blocks (pinned): nothing evictable
+    assert cache.reclaim(100) == 0
+    cache.detach(1)
+    # unpinned but still shared with rid 1's table: still not evictable
+    assert cache.reclaim(100) == 0
+    pool.release(1)
+    # now uniquely cache-owned: evictable, blocks return to the free list
+    free_before = len(pool.free)
+    assert cache.reclaim(100) == 4
+    assert len(pool.free) == free_before + 4
+    assert bm.cache_charge == 0
+
+
+def test_radix_lru_priority_weighted_eviction(cache_env):
+    pool, bm, cache = cache_env
+    lo = RNG.integers(1, 999, 32).astype(np.int32)
+    hi = RNG.integers(1, 999, 32).astype(np.int32)
+    _prefill(pool, 1, lo)
+    _prefill(pool, 2, hi)
+    bm.charge_cache(cache.insert(lo, pool.tables[1], 1, now=5.0, weight=1.0))
+    bm.charge_cache(cache.insert(hi, pool.tables[2], 2, now=0.0, weight=2.0))
+    for rid in (1, 2):
+        cache.detach(rid)
+        pool.release(rid)
+    # hi is OLDER but priority-weighted: lo evicts first
+    assert cache.reclaim(1) == 2
+    assert cache.match(hi, now=6.0, rid=9)[0] == 16
+
+
+def test_radix_release_detaches_zero_adoption_pins(cache_env):
+    """Cold-start race: two requests prefill the same prompt concurrently;
+    the second's insert adopts nothing (path already present) yet pins it.
+    Release must still detach, or the entry is unevictable forever."""
+    pool, bm, cache = cache_env
+    toks = RNG.integers(1, 999, 64).astype(np.int32)
+    r1, r2 = make_req(plen=64), make_req(plen=64)
+    for r in (r1, r2):
+        _prefill(pool, r.rid, toks)
+        assert bm.grow(r, 64, 0.0)
+    a1 = cache.insert(toks, pool.tables[r1.rid], r1.rid, now=0.0)
+    a2 = cache.insert(toks, pool.tables[r2.rid], r2.rid, now=0.0)
+    assert a1 == 4 and a2 == 0
+    bm.donate_to_cache(r1, a1)
+    for r in (r1, r2):
+        bm.release(r)
+        pool.release(r.rid)
+    assert cache.reclaim(100) == 4          # no stale pin blocks eviction
+    assert bm.cache_charge == 0
+
+
+# --- BlockManager <-> cache accounting --------------------------------------
+
+def test_bm_cache_charge_conservation():
+    bm = BlockManager(64, 16, 1e-3)
+    cache = SimPrefixCache(16, 32)
+    cache.bm = bm
+    bm.cache = cache
+    r1 = make_req(plen=100, group=0, shared=64)
+    assert bm.grow(r1, 100, 0.0)                    # prefill fully
+    assert bm.used_blocks == 7
+    adopted = cache.insert(r1, 0.0)
+    assert adopted == 4                             # 64 shared tokens
+    bm.donate_to_cache(r1, adopted)
+    assert bm.used_blocks == 3 and bm.cache_charge == 4
+    assert bm.free_blocks == 64 - 7
+    # second request of the group: attaches without new charge
+    r2 = make_req(plen=100, group=0, shared=64)
+    hit = cache.match(r2, 1.0)
+    assert hit == 64
+    bm.attach_cached(r2, hit)
+    cache.attach(r2.rid, 0)
+    assert bm.grow(r2, 36, 1.0)                     # only the suffix
+    assert bm.used_blocks == 3 + 3                  # ceil(100/16)-4 = 3
+    bm.release(r2)
+    assert bm.used_blocks == 3
+    bm.release(r1)
+    assert bm.used_blocks == 0 and bm.cache_charge == 4
+    # entry unpinned now: reclaim pressure frees it
+    assert bm.reclaim_cache(4) == 4
+    assert bm.free_blocks == 64
+
+
+def test_bm_eviction_spares_cache_blocks():
+    bm = BlockManager(16, 16, 1e-3)
+    cache = SimPrefixCache(16, 8)
+    cache.bm = bm
+    bm.cache = cache
+    r = make_req(plen=64, group=1, shared=32)
+    assert bm.grow(r, 64, 0.0)
+    bm.donate_to_cache(r, cache.insert(r, 0.0))
+    assert bm.cache_charge == 2
+    bm.complete_offloads(1.0)
+    freed = bm.evict(r, 1.0)
+    assert freed == 2                               # only unique blocks
+    assert bm.cache_charge == 2                     # cache entry intact
+    assert bm.used_blocks == 0
+    assert cache.peek_tokens(make_req(plen=64, group=1, shared=32)) == 32
+
+
+def test_sim_release_detaches_zero_adoption_pins():
+    """Same cold-start race on the simulator cache model."""
+    bm = BlockManager(64, 16, 1e-3)
+    cache = SimPrefixCache(16, 32)
+    cache.bm = bm
+    bm.cache = cache
+    r1 = make_req(plen=100, group=0, shared=64)
+    r2 = make_req(plen=100, group=0, shared=64)
+    for r in (r1, r2):
+        assert bm.grow(r, 100, 0.0)      # both miss: concurrent cold start
+    bm.donate_to_cache(r1, cache.insert(r1, 0.0))
+    assert cache.insert(r2, 0.0) == 0    # entry already present, still pins
+    bm.release(r1)
+    bm.release(r2)
+    assert bm.reclaim_cache(100) == 4    # no stale pin blocks eviction
+    assert bm.cache_charge == 0
+
+
+def test_sim_cache_usable_prefix_alignment():
+    assert usable_prefix(64, 100, 16) == 64
+    assert usable_prefix(64, 64, 16) == 48      # leave >=1 token to prefill
+    assert usable_prefix(100, 33, 16) == 32
+    assert usable_prefix(8, 100, 16) == 0
+
+
+# --- engine end-to-end: shared tables are bitwise-exact ----------------------
+
+def test_engine_shared_prefix_outputs_bitwise_match():
+    """Requests sharing a prompt prefix through the radix cache must emit
+    exactly the tokens of an uncached engine (shared block tables + CoW
+    change memory layout, never results)."""
+    import jax
+
+    from repro.configs import get_smoke
+    from repro.models import init_params
+    from repro.serving import Engine
+
+    cfg = get_smoke("qwen1_5_0_5b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    def make_engine(prefix_cache):
+        return Engine(cfg, params, EngineConfig(eta=1.0, w_p=4.0, tau=1e9),
+                      make_policy("slidebatching"), num_blocks=96,
+                      block_size=16, max_ctx=256, prefix_cache=prefix_cache)
+
+    shared = RNG.integers(1, cfg.vocab, 32).astype(np.int32)
+    prompts = [np.concatenate([shared,
+                               RNG.integers(1, cfg.vocab, 8 + 4 * i)
+                               .astype(np.int32)]) for i in range(4)]
+    outs = {}
+    for cache_on in (True, False):
+        eng = make_engine(cache_on)
+        reqs = []
+        # staged admission: the first request prefills (and seeds the
+        # cache) before the rest arrive and share its prefix blocks
+        for wave in (prompts[:1], prompts[1:]):
+            for p in wave:
+                r = make_req(plen=len(p))
+                r.output_len = 4
+                eng.add_request(r, p)
+                reqs.append(r)
+            eng.run_until_drained(max_iters=200)
+        outs[cache_on] = [eng.outputs[r.rid] for r in reqs]
+        if cache_on:
+            assert eng.stats.cache_hit_tokens >= 3 * 32, \
+                "test must actually exercise prefix sharing"
+    assert outs[True] == outs[False]
+
+
+# --- router prefix affinity --------------------------------------------------
+
+EST = BatchLatencyEstimator(a_p=0.0, b_p=0.0, c_p=1e-3, a_d=0.0,
+                            b_d=0.0, t_c=0.0)  # 1 ms per prefill token
+
+
+def test_registry_longest_prefix_lookup():
+    reg = PrefixRegistry(block_size=16)
+    t = RNG.integers(1, 999, 64).astype(np.int32)
+    reg.observe(3, t)
+    assert reg.lookup(t).get(3) == 48           # capped: 63 usable tokens
+    div = t.copy()
+    div[20] += 1
+    assert reg.lookup(div).get(3) == 16         # only the first block agrees
+    assert reg.lookup(RNG.integers(1, 999, 64)) == {}
+    reg.drop(3)
+    assert reg.lookup(t) == {}
+
+
+def test_gorouting_prefix_affinity_tiebreak():
+    """Equal-load replicas: the one holding the prefix wins; a replica
+    holding the prefix but hopelessly overloaded still loses."""
+    gr = GoRouting(EST, RouterConfig(pd_mode="disagg", alpha=0.0))
+    r = make_req(plen=200)
+    a, b = InstanceState(iid=0, b_f=100), InstanceState(iid=1, b_f=100)
+    pick, _ = gr.select(r, [a, b], None, now=0.0, affinity={1: 128})
+    assert pick == 1
+    # same but instance 1 is overloaded far beyond what affinity saves
+    from repro.core import QueuedStub
+    b.on_dispatch(QueuedStub(99, 0.0, 2, 1.0, 3000, 10.0, 3.0), 0.0)
+    pick2, _ = gr.select(r, [a, b], None, now=0.0, affinity={1: 128})
+    assert pick2 == 0
+
+
+def test_routerbook_routes_repeat_prefix_to_same_replica():
+    from repro.serving import RouterBook
+
+    book = RouterBook(GoRouting(EST, RouterConfig(pd_mode="disagg")), EST)
+    book.add_instance(0, 1000, 1000)
+    book.add_instance(1, 1000, 1000)
+    prompt = RNG.integers(1, 999, 64).astype(np.int32)
+    first = book.route(make_req(plen=64), 0.0, prompt_tokens=prompt)
+    assert first is not None
+    # the repeat lands where the prefix lives, despite the queued stub
+    again = book.route(make_req(plen=64), 0.0, prompt_tokens=prompt)
+    assert again == first
+    # ... and its stub reflects only the uncached suffix
+    stub = list(book.states[first].pre_queue.values())[-1]
+    assert stub.exec == pytest.approx(EST.prefill_time_cached(64, 48))
+
+
+def test_routerbook_disables_affinity_for_cacheless_fleet():
+    """A replica without a prefix cache joins: affinity routing must turn
+    off, so a cache-OFF baseline is a true no-cache baseline (stub costs
+    are full prefills, no prefix-holder bias)."""
+    from repro.serving import RouterBook
+
+    book = RouterBook(GoRouting(EST, RouterConfig(pd_mode="disagg")), EST)
+    book.add_instance(0, 1000, 1000, has_prefix_cache=False)
+    book.add_instance(1, 1000, 1000)
+    assert book.registry is None
+    prompt = RNG.integers(1, 999, 64).astype(np.int32)
+    for _ in range(2):                       # repeats get no cache discount
+        iid = book.route(make_req(plen=64), 0.0, prompt_tokens=prompt)
+        stub = list(book.states[iid].pre_queue.values())[-1]
+        assert stub.exec == pytest.approx(EST.prefill_time(64))

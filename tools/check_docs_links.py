@@ -1,0 +1,46 @@
+#!/usr/bin/env python3
+"""Markdown link check: every relative link/image target in README.md and
+docs/ must exist in the repo (anchors and external URLs are skipped).
+
+    python tools/check_docs_links.py            # from the repo root
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check(root: pathlib.Path) -> list[str]:
+    errors = []
+    files = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+    for md in files:
+        if not md.exists():
+            errors.append(f"{md}: file missing")
+            continue
+        for ln, line in enumerate(md.read_text().splitlines(), 1):
+            for target in LINK.findall(line):
+                if target.startswith(("http://", "https://", "mailto:", "#")):
+                    continue
+                path = (md.parent / target.split("#")[0]).resolve()
+                if not path.exists():
+                    errors.append(f"{md.relative_to(root)}:{ln}: "
+                                  f"broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    root = pathlib.Path(__file__).resolve().parent.parent
+    errors = check(root)
+    for e in errors:
+        print(e, file=sys.stderr)
+    n_files = 1 + len(list((root / "docs").glob("*.md")))
+    print(f"checked {n_files} markdown files: "
+          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
