@@ -19,6 +19,7 @@ from .common import emit_csv, save
 BENCHES = [
     ("replay_router_sweep", replay_bench.replay_router_sweep),
     ("replay_shared_prefix", replay_bench.replay_shared_prefix),
+    ("replay_overlap", replay_bench.replay_overlap),
     ("fig2_partition_vs_colocation", paper_figures.fig2_partition_vs_colocation),
     ("fig3_priority_first_vs_fcfs", paper_figures.fig3_priority_first_vs_fcfs),
     ("fig4to8_policy_load_sweeps", paper_figures.fig4to8_policy_load_sweeps),

@@ -68,6 +68,10 @@ class ReqBlocks:
     host_tokens: int = 0    # next contiguous span resident on host
     mirrored_blocks: int = 0  # device blocks already mirrored to host (async offload)
     pending_offload: int = 0  # blocks queued on the D2H lane, not yet complete
+    restore_pending: int = 0  # blocks apply_reload promised device-resident
+    # whose DATA still sits on host — the engine's H2D copy order.  (With
+    # async mirroring the host dict alone can't signal this: mirrored
+    # blocks of a live device-resident request also appear there.)
     shared_blocks: int = 0  # table blocks charged to the prefix cache, not
     # to used_blocks (cache-referenced; possibly shared with other requests)
 
@@ -109,7 +113,7 @@ class BlockManager:
                  t_block: float, *, async_offload: bool = True,
                  adaptive_copy: bool = True, recompute_only: bool = False,
                  n_off_by_priority: Optional[dict[int, int]] = None,
-                 beta: float = 1.5):
+                 beta: float = 1.5, t_block_alpha: float = 0.25):
         self.num_device_blocks = num_device_blocks
         self.block_size = block_size
         self.t_block = t_block
@@ -128,6 +132,17 @@ class BlockManager:
         # are charged here so free_blocks stays truthful for admission.
         self.cache: Optional[PrefixCacheHandle] = None
         self.cache_charge = 0
+        # --- real transfer lanes (§4.3 closed loop) -----------------------
+        # With ``external_lanes`` an engine-owned background worker performs
+        # the actual copies: proactive-offload directives are forwarded to
+        # ``offload_sink(rid, start_block, n_blocks)`` and mirrored blocks
+        # advance only on ``note_offload_complete`` (real completions), not
+        # on the virtual lane clock.  ``observe_transfer`` feeds measured
+        # copy throughput back into ``t_block`` so the adaptive copy budget
+        # tracks the hardware instead of a configured constant.
+        self.external_lanes = False
+        self.offload_sink: Optional[callable] = None
+        self.t_block_alpha = t_block_alpha
 
     # ------------------------------------------------------------------
     def state(self, req: Request) -> ReqBlocks:
@@ -206,15 +221,53 @@ class BlockManager:
         full = s.dev_tokens // self.block_size        # only full blocks mirror
         unmirrored = full - s.mirrored_blocks - s.pending_offload
         if unmirrored >= n_off:
-            self.d2h.enqueue(now, unmirrored)
+            start = s.mirrored_blocks + s.pending_offload
+            if self.external_lanes and self.offload_sink is not None:
+                self.offload_sink(req.rid, start, unmirrored)
+            else:
+                self.d2h.enqueue(now, unmirrored)
             s.pending_offload += unmirrored
 
     def complete_offloads(self, now: float) -> None:
-        """Advance the D2H lane: anything enqueued before ``now`` is durable."""
+        """Advance the D2H lane: anything enqueued before ``now`` is durable.
+
+        With ``external_lanes`` this is a no-op — real transfer completions
+        arrive via ``note_offload_complete`` instead of a virtual clock."""
+        if self.external_lanes:
+            return
         for s in self.table.values():
             if s.pending_offload and self.d2h.busy_until <= now:
                 s.mirrored_blocks += s.pending_offload
                 s.pending_offload = 0
+
+    def note_offload_complete(self, rid: int, n_blocks: int) -> None:
+        """A real D2H transfer of ``n_blocks`` landed on host (engine
+        transfer-worker completion callback)."""
+        s = self.table.get(rid)
+        if s is None:
+            return
+        take = min(n_blocks, s.pending_offload)
+        s.pending_offload -= take
+        s.mirrored_blocks = min(s.mirrored_blocks + take,
+                                s.dev_tokens // self.block_size)
+
+    def note_offload_failed(self, rid: int, n_blocks: int) -> None:
+        """A real D2H transfer failed: release its pending-offload claim so
+        proactive mirroring can retry (the blocks stay unmirrored)."""
+        s = self.table.get(rid)
+        if s is None:
+            return
+        s.pending_offload = max(0, s.pending_offload - n_blocks)
+
+    def observe_transfer(self, n_blocks: int, seconds: float) -> None:
+        """Close the §4.3 control loop: fold a measured copy into the
+        per-block transfer-time estimate the copy budget is computed from."""
+        if n_blocks <= 0 or seconds <= 0:
+            return
+        sample = seconds / n_blocks
+        a = self.t_block_alpha
+        self.t_block = (1.0 - a) * self.t_block + a * sample
+        self.d2h.t_block = self.h2d.t_block = self.t_block
 
     def release(self, req: Request) -> None:
         """Request finished: free its uniquely-owned device + host
@@ -262,6 +315,7 @@ class BlockManager:
             s.host_tokens = saved_tokens                    # gap: suffix dropped
         s.dev_tokens = 0
         s.mirrored_blocks = 0
+        s.restore_pending = 0   # nothing device-resident left to materialize
         self.used_blocks -= freed
         s.shared_blocks = 0
         if self.cache is not None:
@@ -347,6 +401,7 @@ class BlockManager:
         self.used_blocks += need
         s.dev_tokens += restore_tokens
         s.host_tokens -= restore_tokens
+        s.restore_pending += need   # engine: copy these blocks H2D
         done = self.h2d.enqueue(now, plan.restore_blocks)
         if plan.drop_host_tokens:
             s.host_tokens = max(0, s.host_tokens - plan.drop_host_tokens)

@@ -1,8 +1,9 @@
 """Pallas TPU kernels for the serving hot paths (+ interpret-mode CPU
 validation): paged flash-decode attention, chunked-prefill flash attention,
 KV block gather.  ref.py holds the pure-jnp oracles."""
-from .ops import paged_decode_attention, chunked_prefill_attention, block_gather
+from .ops import (paged_decode_attention, chunked_prefill_attention,
+                  packed_prefill_attention, block_gather)
 from . import ref
 
 __all__ = ["paged_decode_attention", "chunked_prefill_attention",
-           "block_gather", "ref"]
+           "packed_prefill_attention", "block_gather", "ref"]

@@ -12,6 +12,7 @@ import jax
 
 from .block_gather import block_gather as _block_gather
 from .chunked_prefill import chunked_prefill_attention as _chunked_prefill
+from .chunked_prefill import packed_prefill_attention as _packed_prefill
 from .paged_attention import paged_decode_attention as _paged_decode
 
 
@@ -34,6 +35,15 @@ def chunked_prefill_attention(q, k_cache, v_cache, cache_lens,
     it = _interpret_default() if interpret is None else interpret
     return _chunked_prefill(q, k_cache, v_cache, cache_lens,
                             kv_block=kv_block, interpret=it)
+
+
+@partial(jax.jit, static_argnames=("kv_block", "interpret"))
+def packed_prefill_attention(q, k_cache, v_cache, ctx_lens,
+                             kv_block: int = 512,
+                             interpret: bool | None = None):
+    it = _interpret_default() if interpret is None else interpret
+    return _packed_prefill(q, k_cache, v_cache, ctx_lens,
+                           kv_block=kv_block, interpret=it)
 
 
 @partial(jax.jit, static_argnames=("interpret",))

@@ -3,13 +3,15 @@ batching engine, threaded engine drivers, the synchronous GoRouting service
 controller, and the async streaming front-end."""
 from .kv_pool import PagedKVPool
 from .prefix_cache import RadixPrefixCache
+from .transfer import TransferDone, TransferWorker
 from .engine import Engine, EngineDriver, EngineStats, StepEvent, TokenEvent
 from .dispatch import RouterBook
 from .service import ServiceController, ServiceConfig
 from .frontend import (AdmissionError, FrontendConfig, RequestStream,
                        ServiceFrontend)
 
-__all__ = ["PagedKVPool", "RadixPrefixCache", "Engine", "EngineDriver",
+__all__ = ["PagedKVPool", "RadixPrefixCache", "TransferDone",
+           "TransferWorker", "Engine", "EngineDriver",
            "EngineStats", "StepEvent", "TokenEvent", "RouterBook",
            "ServiceController", "ServiceConfig", "AdmissionError",
            "FrontendConfig", "RequestStream", "ServiceFrontend"]

@@ -6,10 +6,15 @@ One ``Engine`` = one model replica.  Each iteration:
      that drives the simulator) forms a batch against the shared
      BlockManager accounting;
   2. reload/eviction directives are applied to the PagedKVPool (host
-     mirrors, drops, restores);
+     mirrors, drops, restores) — with ``overlap_transfers`` the copies run
+     on a background worker (serving/transfer.py): offloads are enqueued
+     as one-gather snapshots, reloads consume pre-staged buffers, and
+     completions feed the BlockManager's accounting lanes + the measured
+     ``t_block`` behind the §4.3 adaptive copy budget;
   3. decode entries run as one ``decode_batch`` call; prefill chunks run
-     per request (``prefill_chunk``), greedy-sampling the first token when
-     a prompt completes;
+     PACKED — every request's chunk concatenated into one flat-stream
+     ``prefill_packed`` call (per-request ``prefill_chunk`` kept as a
+     fallback) — greedy-sampling the first token when a prompt completes;
   4. measured wall-clock batch latencies feed the §4.1 estimator, which is
      refit online every ``refit_every`` batches (the offline-profiling
      bootstrap happens in ``calibrate``).
@@ -28,9 +33,11 @@ Two driving modes:
 """
 from __future__ import annotations
 
+import logging
 import queue
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -45,6 +52,9 @@ from ..models.model import ArchConfig
 from . import model_exec
 from .kv_pool import PagedKVPool
 from .prefix_cache import RadixPrefixCache
+from .transfer import TransferWorker
+
+logger = logging.getLogger(__name__)
 
 
 @dataclass(frozen=True)
@@ -67,6 +77,10 @@ class StepEvent:
     est_time: float
     prefill_done: tuple = ()     # rids whose first token just came out
     finished: tuple = ()         # rids fully generated this step
+    # per-step transfer/overlap telemetry (§4.3 lanes made real)
+    offload_blocks: int = 0      # D2H completions drained this step
+    reload_blocks: int = 0       # H2D blocks restored for this batch
+    transfer_wait: float = 0.0   # seconds the step stalled on sync copies
 
 
 @dataclass
@@ -79,7 +93,18 @@ class EngineStats:
     cache_hit_tokens: int = 0      # prompt tokens served from the prefix cache
     cache_insert_blocks: int = 0   # blocks adopted into the prefix cache
     cow_forks: int = 0             # copy-on-write forks of shared blocks
-    batch_latencies: list = field(default_factory=list)
+    packed_prefill_calls: int = 0  # batched multi-request prefill launches
+    offload_blocks: int = 0        # async D2H blocks landed on host
+    staged_hits: int = 0           # reloads served from pre-staged buffers
+    staged_misses: int = 0         # reloads that fell back to a sync copy
+    transfer_wait_s: float = 0.0   # total step time stalled on sync copies
+    transfer_failures: int = 0     # background copies that raised (fell
+    # back to the synchronous path; first one is logged by the worker)
+    t_block_measured: float = 0.0  # EWMA per-block copy time (closed loop)
+    refit_failures: int = 0        # online estimator refits that failed
+    # bounded: long-lived replicas must not grow without limit
+    batch_latencies: deque = field(
+        default_factory=lambda: deque(maxlen=512))
 
 
 class Engine:
@@ -89,7 +114,9 @@ class Engine:
                  est: Optional[BatchLatencyEstimator] = None,
                  bm_kwargs: Optional[dict] = None, seed: int = 0,
                  prefix_cache: bool = True,
-                 cache_blocks: Optional[int] = None):
+                 cache_blocks: Optional[int] = None,
+                 packed_prefill: bool = True,
+                 overlap_transfers: bool = True):
         self.cfg = cfg
         self.params = params
         self.eng_cfg = eng_cfg
@@ -106,6 +133,24 @@ class Engine:
             if prefix_cache else None)
         self.est = est or BatchLatencyEstimator(
             a_p=1e-8, b_p=1e-8, c_p=1e-5, a_d=1e-8, b_d=1e-4, t_c=1e-3)
+        # --- overlapped execution (packed prefill + async transfer lanes)
+        self.packed_prefill = packed_prefill
+        self.overlap_transfers = overlap_transfers
+        self.worker: Optional[TransferWorker] = (
+            TransferWorker() if overlap_transfers else None)
+        # per-rid transfer epoch: bumped on evict/release so background
+        # completions for a superseded residency generation are discarded
+        self._epoch: dict[int, int] = {}
+        # proactive-offload directives recorded during form_batch (the K/V
+        # they name is only fully written once the step's exec completes)
+        self._offload_directives: list[tuple[int, int, int, int]] = []
+        if self.worker is not None:
+            self.bm.external_lanes = True
+            self.bm.offload_sink = self._note_offload_directive
+        # full token sequence (prompt + outputs) per request, appended
+        # incrementally — avoids the per-chunk prompt+outputs rebuild
+        self._seqs: dict[int, np.ndarray] = {}
+        self._seq_fill: dict[int, int] = {}
         self.queue: list[Request] = []
         self.now = 0.0
         # when set (frontend mode), ``now`` tracks wall time relative to a
@@ -134,6 +179,15 @@ class Engine:
         self.outputs[req.rid] = list(prior_outputs or [])
         prompt = np.asarray(prompt_tokens, np.int32)
         req._prompt = prompt  # type: ignore
+        # pre-size the full token sequence once; _emit appends in place
+        prior = self.outputs[req.rid]
+        seq = np.zeros(len(prompt) + max(req.output_len, len(prior)) + 1,
+                       np.int32)
+        seq[:len(prompt)] = prompt
+        if prior:
+            seq[len(prompt):len(prompt) + len(prior)] = prior
+        self._seqs[req.rid] = seq
+        self._seq_fill[req.rid] = len(prompt) + len(prior)
         if self.cache is not None:
             hit, blocks = self.cache.match(prompt, self.now, req.rid,
                                            req.weight)
@@ -149,17 +203,116 @@ class Engine:
         return any(r.phase != Phase.FINISHED for r in self.queue)
 
     # ------------------------------------------------------------------
+    # §4.3 transfer lanes (background worker plumbing)
+    # ------------------------------------------------------------------
+    def _note_offload_directive(self, rid: int, start: int, n: int) -> None:
+        """BlockManager offload_sink: a proactive D2H mirror was scheduled
+        during form_batch.  The blocks' K/V is only guaranteed written once
+        this step's exec completes, so just record the directive; the
+        device snapshot happens in ``_dispatch_offloads``."""
+        self._offload_directives.append(
+            (rid, start, n, self._epoch.get(rid, 0)))
+
+    def _dispatch_offloads(self) -> None:
+        """Snapshot each recorded directive's blocks (one device gather)
+        and hand them to the background D2H lane."""
+        directives, self._offload_directives = self._offload_directives, []
+        if self.worker is None:
+            return
+        for rid, start, n, epoch in directives:
+            if epoch != self._epoch.get(rid, 0):
+                continue            # evicted/released since the directive
+            t = self.pool.tables.get(rid)
+            if not t:
+                continue
+            logical = [bi for bi in range(start, start + n) if bi < len(t)]
+            if not logical:
+                continue
+            gathered = self.pool.gather_blocks(rid, logical)
+            self.worker.offload(rid, epoch, logical, gathered)
+
+    def _drain_transfers(self) -> int:
+        """Collect background-copy completions; feed the accounting lanes
+        (real transfers replace the virtual clock) and the measured-
+        throughput side of the adaptive copy budget."""
+        if self.worker is None:
+            return 0
+        landed = 0
+        for d in self.worker.drain():
+            stale = d.epoch != self._epoch.get(d.rid, 0)
+            dead = d.rid not in self.bm.table
+            if d.kind == "h2d":
+                # a staging buffer that can no longer be consumed would pin
+                # one of the double-buffer slots forever: job finished after
+                # invalidate() (stale), after the request was released
+                # (dead), or after the reload it was staged for already ran
+                # synchronously (nothing left on host to restore)
+                s = self.bm.table.get(d.rid)
+                if dead or (s is not None and s.host_tokens == 0):
+                    self.worker.invalidate(d.rid)
+                elif stale:
+                    self.worker.discard_stale(d.rid,
+                                              self._epoch.get(d.rid, 0))
+            if stale:
+                continue
+            if not d.ok:
+                self.stats.transfer_failures += 1
+                if d.kind == "d2h":
+                    # release the pending claim; mirroring retries later
+                    self.bm.note_offload_failed(d.rid, d.n_blocks)
+                continue
+            if d.kind == "d2h" and d.rid in self.bm.table:
+                self.pool.host_store(d.rid, d.blocks)
+                self.bm.note_offload_complete(d.rid, d.n_blocks)
+                self.stats.offload_blocks += d.n_blocks
+                landed += d.n_blocks
+            self.bm.observe_transfer(d.n_blocks, d.seconds)
+            self.stats.t_block_measured = self.bm.t_block
+        return landed
+
+    def _prefetch_reloads(self) -> None:
+        """Hint the H2D staging lane: evicted requests near the head of the
+        (policy-sorted) queue will likely reload next round — stage their
+        host blocks now so the copy lands before the batch that needs it."""
+        if self.worker is None:
+            return
+        hinted = 0
+        for r in self.queue:
+            if hinted >= self.worker.max_staged:
+                break
+            s = self.bm.table.get(r.rid)
+            if s is None or s.host_tokens <= 0 or s.dev_tokens > 0:
+                continue
+            nb = blocks_for(s.host_tokens, self.bm.block_size)
+            h = self.pool.host.get(r.rid, {})
+            if not all(bi in h for bi in range(nb)):
+                continue
+            if self.worker.prefetch(r.rid, self._epoch.get(r.rid, 0),
+                                    [h[bi] for bi in range(nb)]):
+                hinted += 1
+
+    def _forget_transfers(self, rid: int) -> None:
+        """Invalidate all in-flight transfer state for rid (evict/release)."""
+        self._epoch[rid] = self._epoch.get(rid, 0) + 1
+        if self.worker is not None:
+            self.worker.invalidate(rid)
+
     def _sync_pool_with_bm(self, plan: BatchPlan) -> None:
         """Apply the §4.3 directives the policy issued on the accounting
         layer (BlockManager) to the actual data (PagedKVPool)."""
         for r in plan.evictions:
             s = self.bm.state(r)
-            # mirror what survives to host, then drop device blocks
+            # the surviving span must be on host: with overlap the async
+            # mirror already landed (mirrored_blocks only counts real
+            # completions); otherwise copy the missing blocks now, in one
+            # batched device fetch
             keep_blocks = blocks_for(s.host_tokens, self.bm.block_size)
             if keep_blocks:
-                self.pool.offload_blocks(
-                    r.rid, list(range(keep_blocks)))
+                h = self.pool.host.get(r.rid, {})
+                missing = [bi for bi in range(keep_blocks) if bi not in h]
+                self.pool.offload_blocks(r.rid, missing)
             self.pool.drop_device_blocks(r.rid)
+            self._forget_transfers(r.rid)
             self.stats.evictions += 1
 
     def use_wall_clock(self, epoch: float) -> None:
@@ -173,70 +326,71 @@ class Engine:
             return None
         if self._wall_epoch is not None:
             self.now = max(self.now, time.monotonic() - self._wall_epoch)
+        offload_landed = self._drain_transfers()
         self.bm.complete_offloads(self.now)
         view = SchedView(self.queue, self.bm, self.est, self.eng_cfg,
                          self.now)
         plan = self.policy.form_batch(view)
         if not plan.entries:
+            # evictions can outlive a failed admission round: keep the
+            # pool consistent with the accounting before going idle, and
+            # use the idle gap to stage likely reloads
+            if plan.evictions:
+                self._sync_pool_with_bm(plan)
+            self._offload_directives.clear()
+            self._prefetch_reloads()
             return None
         t0 = time.monotonic()
         self._sync_pool_with_bm(plan)
 
-        # reload data for requests whose plan restored host blocks
+        # reload data for requests whose plan restored host blocks; prefer
+        # the background lane's pre-staged buffers (the H2D copy already
+        # landed), falling back to a synchronous batched copy
+        step_reload, step_wait = 0, 0.0
         for e in plan.entries:
+            s = self.bm.state(e.req)
             hb = self.pool.host_blocks(e.req.rid)
-            dev_tok = self.bm.state(e.req).dev_tokens
-            dev_blocks_needed = blocks_for(dev_tok, self.bm.block_size)
+            dev_blocks_needed = blocks_for(s.dev_tokens, self.bm.block_size)
             have = len(self.pool.tables.get(e.req.rid, []))
-            if have < dev_blocks_needed and hb:
-                n = dev_blocks_needed - have
-                self.pool.reload_blocks(e.req.rid, n)
+            # only copy what apply_reload promised (restore_pending): with
+            # async mirroring, host entries also exist for live
+            # device-resident requests, so ``hb > 0`` alone would trigger
+            # phantom reloads on every block-boundary growth
+            if s.restore_pending > 0 and have < dev_blocks_needed and hb:
+                n = min(s.restore_pending, dev_blocks_needed - have)
+                s.restore_pending = 0
+                staged = (self.worker.take_staged(
+                    e.req.rid, self._epoch.get(e.req.rid, 0))
+                    if self.worker is not None else None)
+                if staged is not None and staged[0] > 0:
+                    # ``n`` also counts blocks this step will write fresh
+                    # (grown chunk/decode tokens); the staged buffer covers
+                    # exactly the restorable host prefix — consume what it
+                    # has, the rest is new capacity allocated at exec time
+                    # (same semantics as reload_blocks, which stops at the
+                    # first non-host block)
+                    self.pool.reload_from_device(e.req.rid, staged[1],
+                                                 min(n, staged[0]))
+                    self.stats.staged_hits += 1
+                else:
+                    tr0 = time.monotonic()
+                    self.pool.reload_blocks(e.req.rid, n)
+                    step_wait += time.monotonic() - tr0
+                    if self.worker is not None:
+                        self.stats.staged_misses += 1
                 self.stats.reload_blocks += n
+                step_reload += n
+        self.stats.transfer_wait_s += step_wait
 
         decode_entries = [e for e in plan.entries if not e.is_prefill]
         prefill_entries = [e for e in plan.entries if e.is_prefill]
         emitted: list[Request] = []
 
-        # --- prefill / recompute chunks (per request) ---------------------
-        for e in prefill_entries:
-            r = e.req
-            c = model_exec.bucket(e.n_tokens)
-            ctx = e.l_kv
-            self.pool.ensure_capacity(r.rid, ctx + e.n_tokens)
-            # CoW guard: the first block written this pass may be shared
-            # (all later blocks are freshly allocated)
-            if self.pool.ensure_writable(r.rid, ctx // self.pool.block_size):
-                self.bm.note_fork(r)
-                self.stats.cow_forks += 1
-            toks = np.zeros((1, c), np.int32)
-            prompt: np.ndarray = r._prompt  # type: ignore
-            seq = np.concatenate([prompt, np.asarray(
-                self.outputs[r.rid], np.int32)])
-            toks[0, :e.n_tokens] = seq[ctx:ctx + e.n_tokens]
-            max_ctx = model_exec.bucket(ctx + c, buckets=(
-                self.max_ctx,)) if ctx + c <= self.max_ctx else ctx + c
-            maxp = max_ctx // self.pool.block_size
-            table = self.pool.table_array([r.rid], maxp=maxp)
-            logits, self.pool.kv = model_exec.prefill_chunk(
-                self.cfg, self.params, self.pool.kv, jnp.asarray(toks),
-                table, jnp.asarray([ctx], jnp.int32), max_ctx)
-            self.stats.prefill_tokens += e.n_tokens
-            done_ctx = ctx + e.n_tokens
-            target = r.prompt_len + max(0, r.generated - 1)
-            if done_ctx >= r.prompt_len and r.generated == 0:
-                tok = int(jnp.argmax(logits[0, e.n_tokens - 1]))
-                self._emit(r, tok, emitted)
-                if self.cache is not None:
-                    # adopt the prompt's full blocks into the prefix cache
-                    # (charge moves request -> cache; blocks now shared)
-                    adopted = self.cache.insert(
-                        prompt, self.pool.tables[r.rid], r.rid, self.now,
-                        r.weight)
-                    if adopted:
-                        self.bm.donate_to_cache(r, adopted)
-                        self.stats.cache_insert_blocks += adopted
-                    self.cache.shrink_to_capacity()
-            # recompute completion emits nothing (next decode pass does)
+        if prefill_entries:
+            if self.packed_prefill:
+                self._run_prefill_packed(prefill_entries, emitted)
+            else:
+                self._run_prefill_fallback(prefill_entries, emitted)
 
         # --- decode batch ---------------------------------------------------
         if decode_entries:
@@ -274,9 +428,145 @@ class Engine:
         for r in finished:
             self.bm.release(r)
             self.pool.release(r.rid)
+            # drop all per-request transfer state — long-lived replicas
+            # must not grow without bound.  A late completion for this rid
+            # is caught by the dead-request guard in _drain_transfers (rid
+            # no longer in bm.table), so no epoch bump is needed here.
+            if self.worker is not None:
+                self.worker.invalidate(r.rid)
+            self._epoch.pop(r.rid, None)
+            self._seqs.pop(r.rid, None)
+            self._seq_fill.pop(r.rid, None)
         self.queue = [r for r in self.queue if r.phase != Phase.FINISHED]
+        # all K/V written and finished requests released — snapshot +
+        # enqueue the proactive D2H mirrors the policy scheduled (the
+        # released requests' directives drop out via their empty tables,
+        # sparing a full dead-request gather), then stage likely reloads
+        self._dispatch_offloads()
+        self._prefetch_reloads()
         return {"emitted": emitted, "finished": finished,
-                "latency": latency, "plan": plan}
+                "latency": latency, "plan": plan,
+                "offload_blocks": offload_landed,
+                "reload_blocks": step_reload,
+                "transfer_wait": step_wait}
+
+    # ------------------------------------------------------------------
+    # prefill execution
+    # ------------------------------------------------------------------
+    def _seq_view(self, r: Request) -> np.ndarray:
+        """Full known token sequence (prompt + outputs so far), maintained
+        incrementally — no per-chunk concatenation."""
+        return self._seqs[r.rid][:self._seq_fill[r.rid]]
+
+    def _prepare_prefill(self, e) -> None:
+        """Block-table growth + CoW guard shared by both prefill paths."""
+        r, ctx = e.req, e.l_kv
+        self.pool.ensure_capacity(r.rid, ctx + e.n_tokens)
+        # CoW guard: the first block written this pass may be shared
+        # (all later blocks are freshly allocated)
+        if self.pool.ensure_writable(r.rid, ctx // self.pool.block_size):
+            self.bm.note_fork(r)
+            self.stats.cow_forks += 1
+
+    def _finish_prefill(self, e, tok: int, emitted: list) -> None:
+        """Prompt-completion bookkeeping shared by both prefill paths."""
+        r = e.req
+        self._emit(r, tok, emitted)
+        if self.cache is not None:
+            # adopt the prompt's full blocks into the prefix cache
+            # (charge moves request -> cache; blocks now shared)
+            prompt: np.ndarray = r._prompt  # type: ignore
+            adopted = self.cache.insert(
+                prompt, self.pool.tables[r.rid], r.rid, self.now, r.weight)
+            if adopted:
+                self.bm.donate_to_cache(r, adopted)
+                self.stats.cache_insert_blocks += adopted
+            self.cache.shrink_to_capacity()
+
+    def _run_prefill_packed(self, entries: list, emitted: list) -> None:
+        """Packed multi-request prefill: every chunk this step concatenated
+        into one flat token stream and executed in a single bucketed jit
+        call — and each segment stages only the blocks it needs, instead
+        of the engine-wide ``max_ctx`` span per chunk."""
+        bs = self.pool.block_size
+        for e in entries:
+            self._prepare_prefill(e)
+        n_seg = len(entries)
+        sq = model_exec.chunk_bucket(max(e.n_tokens for e in entries))
+        smax = model_exec.chunk_bucket(
+            max(e.l_kv + e.n_tokens for e in entries))
+        smax = -(-smax // bs) * bs
+        maxp = smax // bs
+        total = sum(e.n_tokens for e in entries)
+        t_b = model_exec.flat_bucket(total)
+        s_b = model_exec.seg_bucket(n_seg)
+
+        tokens = np.zeros((1, t_b), np.int32)
+        positions = np.zeros((1, t_b), np.int32)
+        q_rows = np.full((t_b,), s_b, np.int32)   # padding -> extra row
+        q_cols = np.zeros((t_b,), np.int32)
+        sblocks = np.zeros((t_b,), np.int32)      # padding -> null block 0
+        sslots = np.zeros((t_b,), np.int32)
+        tables = np.zeros((s_b, maxp), np.int32)
+        ctx_lens = np.zeros((s_b,), np.int32)
+        last_idx = np.zeros((s_b,), np.int32)
+        off = 0
+        for i, e in enumerate(entries):
+            r, ctx, n = e.req, e.l_kv, e.n_tokens
+            seq = self._seq_view(r)
+            tokens[0, off:off + n] = seq[ctx:ctx + n]
+            pos = np.arange(ctx, ctx + n, dtype=np.int32)
+            positions[0, off:off + n] = pos
+            q_rows[off:off + n] = i
+            q_cols[off:off + n] = np.arange(n, dtype=np.int32)
+            t = np.asarray(self.pool.tables[r.rid], np.int32)
+            sblocks[off:off + n] = t[pos // bs]
+            sslots[off:off + n] = pos % bs
+            k = min(len(t), maxp)
+            tables[i, :k] = t[:k]
+            ctx_lens[i] = ctx
+            last_idx[i] = off + n - 1
+            off += n
+
+        logits, self.pool.kv = model_exec.prefill_packed(
+            self.cfg, self.params, self.pool.kv,
+            jnp.asarray(tokens), jnp.asarray(positions),
+            jnp.asarray(q_rows), jnp.asarray(q_cols),
+            jnp.asarray(sblocks), jnp.asarray(sslots),
+            jnp.asarray(tables), jnp.asarray(ctx_lens),
+            jnp.asarray(last_idx), smax, sq)
+        self.stats.packed_prefill_calls += 1
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        for i, e in enumerate(entries):
+            r = e.req
+            self.stats.prefill_tokens += e.n_tokens
+            if e.l_kv + e.n_tokens >= r.prompt_len and r.generated == 0:
+                self._finish_prefill(e, int(nxt[i]), emitted)
+            # recompute completion emits nothing (next decode pass does)
+
+    def _run_prefill_fallback(self, entries: list, emitted: list) -> None:
+        """Per-request chunked prefill (the pre-packed path, kept for
+        equivalence testing and as a safety hatch)."""
+        for e in entries:
+            r = e.req
+            c = model_exec.bucket(e.n_tokens)
+            ctx = e.l_kv
+            self._prepare_prefill(e)
+            toks = np.zeros((1, c), np.int32)
+            seq = self._seq_view(r)
+            toks[0, :e.n_tokens] = seq[ctx:ctx + e.n_tokens]
+            max_ctx = model_exec.bucket(ctx + c, buckets=(
+                self.max_ctx,)) if ctx + c <= self.max_ctx else ctx + c
+            maxp = max_ctx // self.pool.block_size
+            table = self.pool.table_array([r.rid], maxp=maxp)
+            logits, self.pool.kv = model_exec.prefill_chunk(
+                self.cfg, self.params, self.pool.kv, jnp.asarray(toks),
+                table, jnp.asarray([ctx], jnp.int32), max_ctx)
+            self.stats.prefill_tokens += e.n_tokens
+            if ctx + e.n_tokens >= r.prompt_len and r.generated == 0:
+                tok = int(jnp.argmax(logits[0, e.n_tokens - 1]))
+                self._finish_prefill(e, tok, emitted)
+            # recompute completion emits nothing (next decode pass does)
 
     # ------------------------------------------------------------------
     def _last_token(self, r: Request) -> int:
@@ -287,6 +577,13 @@ class Engine:
 
     def _emit(self, r: Request, tok: int, emitted: list) -> None:
         self.outputs[r.rid].append(tok)
+        seq, fill = self._seqs.get(r.rid), self._seq_fill.get(r.rid, 0)
+        if seq is not None:
+            if fill >= len(seq):    # defensive: output ran past output_len
+                seq = np.concatenate([seq, np.zeros(len(seq), np.int32)])
+                self._seqs[r.rid] = seq
+            seq[fill] = tok
+            self._seq_fill[r.rid] = fill + 1
         first = r.generated == 0
         r.emit_token(self.now)
         self.stats.tokens_out += 1
@@ -300,8 +597,24 @@ class Engine:
             lats = [l for _, l in self._profile]
             self.est = BatchLatencyEstimator.fit(batches, lats)
         except Exception:
-            pass
+            # keep serving on the previous fit, but never silently: count
+            # every failure and log the first one per engine
+            self.stats.refit_failures += 1
+            if self.stats.refit_failures == 1:
+                logger.warning(
+                    "online estimator refit failed (keeping previous "
+                    "coefficients); further failures are only counted",
+                    exc_info=True)
         self._profile = self._profile[-200:]
+
+    def flush_transfers(self, timeout: float = 30.0) -> bool:
+        """Wait for the background lanes to drain, then fold the completed
+        transfers into the accounting (tests / benchmarks)."""
+        if self.worker is None:
+            return True
+        ok = self.worker.flush(timeout)
+        self._drain_transfers()
+        return ok
 
     def run_until_drained(self, max_iters: int = 10000) -> None:
         it = 0
@@ -313,6 +626,8 @@ class Engine:
 
     def kill(self) -> list[Request]:
         self.alive = False
+        if self.worker is not None:
+            self.worker.stop()
         orphans = [r for r in self.queue if r.phase != Phase.FINISHED]
         for r in orphans:
             self.bm.release(r)
@@ -438,6 +753,9 @@ class EngineDriver:
                 iid=self.iid, free_blocks=eng.bm.free_blocks,
                 latency=res["latency"], est_time=res["plan"].est_time,
                 prefill_done=tuple(first_done),
-                finished=tuple(r.rid for r in res["finished"])))
+                finished=tuple(r.rid for r in res["finished"]),
+                offload_blocks=res.get("offload_blocks", 0),
+                reload_blocks=res.get("reload_blocks", 0),
+                transfer_wait=res.get("transfer_wait", 0.0)))
             if not eng.has_work() and self.inbox.empty():
                 self._idle.set()

@@ -119,13 +119,30 @@ class PagedKVPool:
         return True
 
     # --- host offload / reload (§4.3 mechanism) ---------------------------
-    def offload_blocks(self, rid: int, block_indices: list[int]) -> None:
-        """Copy listed LOGICAL blocks of rid to host (async mirror)."""
+    def gather_blocks(self, rid: int, block_indices: list[int]):
+        """Device-side snapshot of rid's logical blocks, shaped
+        (n, L, 2, bs, Hkv, hd).  Because jax arrays are functional the
+        result is a race-free copy: later pool writes (or freeing the
+        source blocks) cannot disturb it — this is what the background
+        D2H lane consumes."""
         t = self.tables[rid]
+        phys = jnp.asarray([t[bi] for bi in block_indices], jnp.int32)
+        return jnp.moveaxis(self.kv[:, :, phys], 2, 0)
+
+    def offload_blocks(self, rid: int, block_indices: list[int]) -> None:
+        """Copy listed LOGICAL blocks of rid to host in ONE device fetch
+        (synchronous fallback path of the D2H lane)."""
+        if not block_indices:
+            return
+        data = np.asarray(jax.device_get(
+            self.gather_blocks(rid, block_indices)))
         h = self.host.setdefault(rid, {})
-        for bi in block_indices:
-            blk = jax.device_get(self.kv[:, :, t[bi]])
-            h[bi] = np.asarray(blk)
+        for i, bi in enumerate(block_indices):
+            h[bi] = data[i]
+
+    def host_store(self, rid: int, blocks: dict) -> None:
+        """Land completed async D2H transfers in the host mirror."""
+        self.host.setdefault(rid, {}).update(blocks)
 
     def drop_device_blocks(self, rid: int) -> None:
         """Drop rid's device references (eviction); shared physical blocks
@@ -154,6 +171,23 @@ class PagedKVPool:
             jnp.asarray(np.stack([blk for _, blk in restorable])), 0, 2)
         self.kv = self.kv.at[:, :, dst].set(data)
         return len(restorable) * self.block_size
+
+    def reload_from_device(self, rid: int, staged, n_blocks: int) -> int:
+        """Staged variant of ``reload_blocks``: ``staged`` is a
+        (m, L, 2, bs, Hkv, hd) array the background H2D lane already
+        landed on device; scatter its first ``n_blocks`` into freshly
+        allocated blocks in one pass.  Returns tokens restored."""
+        n = min(n_blocks, staged.shape[0])
+        dst: list[int] = []
+        for _ in range(n):
+            if not self.alloc(rid, 1):
+                break
+            dst.append(self.tables[rid][-1])
+        if not dst:
+            return 0
+        data = jnp.moveaxis(staged[:len(dst)], 0, 2)
+        self.kv = self.kv.at[:, :, jnp.asarray(dst, jnp.int32)].set(data)
+        return len(dst) * self.block_size
 
     def host_blocks(self, rid: int) -> int:
         return len(self.host.get(rid, ()))

@@ -21,7 +21,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ..kernels.ops import chunked_prefill_attention, paged_decode_attention
+from ..kernels.ops import (chunked_prefill_attention,
+                           packed_prefill_attention, paged_decode_attention)
 from ..models.layers import apply_norm, apply_rope, gelu_mlp, swiglu
 from ..models.model import ArchConfig, _qkv
 
@@ -125,8 +126,128 @@ def prefill_chunk(cfg: ArchConfig, params, pool_kv, tokens, table, ctx_len,
     return logits, pool_kv
 
 
+@functools.partial(jax.jit, static_argnums=(0, 12, 13), donate_argnums=(2,))
+def prefill_packed(cfg: ArchConfig, params, pool_kv, tokens, positions,
+                   q_rows, q_cols, scatter_blocks, scatter_slots, tables,
+                   ctx_lens, last_idx, smax: int, sq: int):
+    """Packed multi-request prefill: several requests' chunks concatenated
+    into ONE flat token stream and executed in a single jitted call.
+
+    The dense ops (embedding, QKV/output projections, MLP) run directly on
+    the packed stream — no padding FLOPs.  Attention regroups queries into
+    a per-segment padded layout and stages only the blocks each segment
+    actually needs (``smax`` covers the longest segment, not the engine-wide
+    ``max_ctx``), then runs the packed Pallas kernel.
+
+      tokens:          (1, T) int32 flat stream, 0-padded to the T bucket
+      positions:       (1, T) absolute position of each token (pad: 0)
+      q_rows / q_cols: (T,)  attention scatter target: segment row /
+                       within-chunk offset.  Padding tokens point at the
+                       extra row ``S`` so they never touch real queries.
+      scatter_blocks / scatter_slots: (T,) physical KV destination of each
+                       token (padding tokens write the null block 0)
+      tables:          (S, smax // block_size) staging tables (pad rows: 0)
+      ctx_lens:        (S,) tokens already cached before each chunk
+      last_idx:        (S,) flat index of each segment's last real token
+      smax, sq:        static staging length / chunk-pad length
+
+    Returns (last-position logits per segment (S, V), new pool)."""
+    t_len = tokens.shape[1]
+    n_seg = tables.shape[0]
+    x = params["embed"][tokens].astype(pool_kv.dtype)      # (1, T, d)
+
+    def layer(carry, xs):
+        x, pool = carry
+        lp, li = xs["p"], xs["i"]
+        h = apply_norm(x, lp["ln1"], cfg.norm)
+        q, k, v = _qkv(cfg, lp["attn"], h)                 # (1, T, H|Hkv, hd)
+        if cfg.rope_fraction > 0:
+            q = apply_rope(q, positions, cfg.rope_fraction, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_fraction, cfg.rope_theta)
+        layer_kv = jax.lax.dynamic_index_in_dim(pool, li, 0, keepdims=False)
+        # one flat scatter writes every segment's chunk K/V
+        layer_kv = layer_kv.at[0, scatter_blocks, scatter_slots].set(k[0])
+        layer_kv = layer_kv.at[1, scatter_blocks, scatter_slots].set(v[0])
+        pool = jax.lax.dynamic_update_index_in_dim(pool, layer_kv, li, 0)
+        # stage each segment's blocks (only the ones it needs)
+        k_stage = layer_kv[0, tables].reshape(
+            n_seg, smax, cfg.n_kv_heads, cfg.hd)
+        v_stage = layer_kv[1, tables].reshape(
+            n_seg, smax, cfg.n_kv_heads, cfg.hd)
+        # regroup flat queries into the padded per-segment layout; the
+        # extra row n_seg absorbs padding tokens
+        q_pad = jnp.zeros((n_seg + 1, sq) + q.shape[2:], q.dtype)
+        q_pad = q_pad.at[q_rows, q_cols].set(q[0])
+        # kv_block matched to the staging length: a fixed 512 would pad
+        # every segment's scores 4x when smax is 128 (masked positions are
+        # bitwise no-ops, but their FLOPs are real)
+        o = packed_prefill_attention(q_pad[:n_seg], k_stage, v_stage,
+                                     ctx_lens, kv_block=min(512, smax))
+        o_ext = jnp.concatenate(
+            [o, jnp.zeros((1,) + o.shape[1:], o.dtype)], axis=0)
+        o_flat = o_ext[q_rows, q_cols]                     # (T, H, hd)
+        a_out = jnp.einsum("tk,kd->td", o_flat.reshape(t_len, -1),
+                           lp["attn"]["wo"])[None]
+        x = x + a_out
+        h2 = apply_norm(x, lp["ln2"], cfg.norm)
+        x = x + _mlp(cfg, lp, h2)
+        return (x, pool), None
+
+    xs = {"p": params["layers"],
+          "i": jnp.arange(cfg.n_layers, dtype=jnp.int32)}
+    (x, pool_kv), _ = jax.lax.scan(layer, (x, pool_kv), xs)
+    x = apply_norm(x, params["ln_f"], cfg.norm)
+    # only each segment's LAST chunk token can be sampled — skip the
+    # (V x T) logit matmul for every other position
+    x_last = x[0, last_idx]                                # (S, d)
+    logits = jnp.einsum("sd,vd->sv", x_last, params["lm_head"])
+    return logits, pool_kv
+
+
 def bucket(n: int, buckets=(16, 32, 64, 128, 256, 512, 1024, 2048)) -> int:
     for b in buckets:
         if n <= b:
             return b
     return -(-n // buckets[-1]) * buckets[-1]
+
+
+def _geom_bucket(n: int, lo: int) -> int:
+    """Round up to the next {2^k, 1.5*2^k} step at or above ``lo``: pad
+    waste is bounded at 1.33x while the number of distinct jit variants
+    stays logarithmic in n (each static shape recompiles the full model
+    forward, so linear-step buckets would explode the variant count)."""
+    b = lo
+    while True:
+        if n <= b:
+            return b
+        if n <= b + b // 2:
+            return b + b // 2
+        b <<= 1
+
+
+def flat_bucket(n: int) -> int:
+    """Bucket for the packed flat token stream: power-of-two steps up to
+    2048, then geometric half-steps — the coarse 2048-step tail of
+    ``bucket`` would pad a 2.3k-token pack to 4k (real FLOPs on every
+    dense op)."""
+    return bucket(n) if n <= 2048 else _geom_bucket(n, 2048)
+
+
+def chunk_bucket(n: int) -> int:
+    """Bucket for the packed per-segment pad length (sq) and staging span:
+    power-of-two steps up to 128, then geometric half-steps — the
+    attention score tile is (G*sq, smax), so the plain pow2 tail would pad
+    a 160-token chunk's scores by 1.6x."""
+    return bucket(n) if n <= 128 else _geom_bucket(n, 128)
+
+
+def seg_bucket(s: int) -> int:
+    """Bucket for the packed segment count: powers of two up to 8, then
+    multiples of 8 (bounds jit variants without padding 24 segments
+    to 32)."""
+    if s <= 8:
+        b = 1
+        while b < s:
+            b <<= 1
+        return b
+    return -(-s // 8) * 8

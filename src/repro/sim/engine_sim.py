@@ -85,6 +85,8 @@ class EngineSim:
         self.alive = True
         self.iterations = 0
         self.prefill_tokens = 0    # prompt/recompute tokens actually computed
+        self.copy_blocks = 0       # H2D reload blocks consumed (§4.3 lane;
+        # the real engine surfaces the same signal via StepEvent.reload_blocks)
         self.batch_log: list[tuple[float, int, float]] = []  # (t, n, latency)
 
     # ------------------------------------------------------------------
@@ -160,6 +162,7 @@ class EngineSim:
         self.queue = [r for r in self.queue if r.phase != Phase.FINISHED]
         self.busy_until = end
         self.iterations += 1
+        self.copy_blocks += plan.copy_blocks
         self.batch_log.append((now, len(plan.entries), end - now))
         return res
 

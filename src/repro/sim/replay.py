@@ -88,7 +88,9 @@ def synth_prompt(req: Request, vocab: int, rng: np.random.Generator,
 
 def smoke_frontend(replicas: int = 2, *, prefix_cache: bool = True,
                    router: str = "gorouting", sched: str = "slidebatching",
-                   w_p: float = 4.0, max_inflight: int = 4096):
+                   w_p: float = 4.0, max_inflight: int = 4096,
+                   packed_prefill: bool = True,
+                   overlap_transfers: bool = True):
     """The smoke-scale live serving stack (tiny model, refcounted paged KV,
     radix prefix cache) shared by ``examples/shared_prefix.py``, the
     ``replay_shared_prefix`` benchmark and the CLI below — one definition,
@@ -116,7 +118,9 @@ def smoke_frontend(replicas: int = 2, *, prefix_cache: bool = True,
         fe.add_instance(Engine(
             cfg, params, EngineConfig(eta=1.0, w_p=w_p, tau=1e9),
             make_policy(sched), num_blocks=192, block_size=16,
-            max_ctx=256, prefix_cache=prefix_cache))
+            max_ctx=256, prefix_cache=prefix_cache,
+            packed_prefill=packed_prefill,
+            overlap_transfers=overlap_transfers))
     return fe, cfg
 
 

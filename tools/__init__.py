@@ -1,0 +1,2 @@
+"""Repo tooling: docs link check, perf smoke gate (importable so the
+benchmark suite can reuse the perf-smoke harness)."""
