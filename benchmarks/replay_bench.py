@@ -14,8 +14,22 @@
   trace measures prefill throughput, a decode trace guards TPOT, and the
   token streams are asserted identical.  The offline counterpart of
   ``tools/perf_smoke.py``.
+* ``replay_scale`` — the vectorized cluster simulator on the 10⁴/10⁵
+  scale presets (streamed trace, streamed metrics), plus a per-request
+  equivalence cross-check against the reference event loop.  Results are
+  written to ``BENCH_replay_scale.json`` at the repo root; CI's
+  ``sim-scale`` job replays the ``ci`` preset under a wall budget and
+  compares the deterministic metrics against the checked-in file
+  (docs/BENCHMARKS.md).  Also runnable directly:
+
+      PYTHONPATH=src python -m benchmarks.replay_bench --preset ci \\
+          --budget 300 --check BENCH_replay_scale.json
 """
 from __future__ import annotations
+
+import json
+import os
+import time
 
 from repro.core import (EngineConfig, GoRouting, MinLoad, RoundRobin,
                         RouterConfig, make_policy)
@@ -23,6 +37,19 @@ from repro.sim import ClusterConfig, ClusterSim, replay_sim
 from repro.sim.workloads import WORKLOADS
 
 from .common import get_exec
+
+# deterministic fields of a replay row (everything except wall time /
+# replay speed) — what the CI scale gate compares bit-for-bit
+NONDETERMINISTIC_KEYS = ("wall_s", "speed")
+
+SCALE_PRESETS = {
+    # contended: ~0.62 SLO attainment at rate 600 — scheduling decisions
+    # actually matter; finishes in well under the CI wall budget
+    "ci": {"n_requests": 10_000, "rate": 600.0, "seed": 7, "replicas": 8},
+    # the acceptance-bar preset: 10⁵ requests, 3 priorities, < 2 min
+    "full": {"n_requests": 100_000, "rate": 450.0, "seed": 7,
+             "replicas": 8},
+}
 
 
 def replay_router_sweep(fast: bool = True) -> list[dict]:
@@ -155,3 +182,201 @@ def replay_overlap(fast: bool = True) -> list[dict]:
         r["prefill_speedup"] = round(
             fastr["prefill_tok_per_s"] / base["prefill_tok_per_s"], 2)
     return rows
+
+
+def engine_step(fast: bool = True) -> list[dict]:
+    """Engine hot-loop trajectory: the full ``tools/perf_smoke.py``
+    measurement (overlap + fused decode + host-sync accounting), written
+    to ``BENCH_engine_step.json`` at the repo root."""
+    import types
+
+    from tools import perf_smoke
+
+    args = types.SimpleNamespace(
+        min_speedup=1.1, requests=24 if fast else 48, prompt_len=160,
+        decode_len=8, max_tpot_ratio=1.3, max_fused_ratio=1.2, seed=0)
+    payload, failures = perf_smoke.collect(args)
+    assert not failures, f"perf gates failed: {failures}"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    with open(os.path.join(root, "BENCH_engine_step.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    rows = []
+    for section, variants in (("prefill", ("baseline", "overlapped")),
+                              ("decode", ("baseline", "overlapped")),
+                              ("decode_fusion", ("logits", "fused"))):
+        for variant in variants:
+            rows.append({"name": "engine_step",
+                         "dataset": f"{section}/{variant}",
+                         **payload[section][variant]})
+    rows.append({"name": "engine_step", "dataset": "gates",
+                 "prefill_speedup": payload["prefill"]["speedup"],
+                 "tpot_ratio": payload["decode"]["tpot_ratio"],
+                 "fused_tpot_ratio":
+                     payload["decode_fusion"]["fused_tpot_ratio"],
+                 "streams_identical": payload["streams_identical"]})
+    return rows
+
+
+# --------------------------------------------------------------------------
+# million-request scale replays (vectorized simulator)
+# --------------------------------------------------------------------------
+
+def _scale_cluster(n_prefill: int, vector: bool = True):
+    from repro.sim import VectorClusterSim
+    ex, est, _ = get_exec()
+    cls = VectorClusterSim if vector else ClusterSim
+    return cls(lambda: make_policy("slidebatching"),
+               GoRouting(est, RouterConfig(pd_mode="coloc")),
+               ex, est, EngineConfig(w_p=4.0),
+               ClusterConfig(pd_mode="coloc", n_prefill=n_prefill))
+
+
+def run_scale_preset(preset: str) -> dict:
+    """One streamed scale replay: the trace is generated lazily
+    (``iter_scale_trace``) and metrics fold per completion
+    (``replay_sim_stream``), so peak memory is O(in-flight), not O(n)."""
+    from repro.sim import iter_scale_trace, replay_sim_stream
+    p = SCALE_PRESETS[preset]
+    cs = _scale_cluster(p["replicas"])
+    rep = replay_sim_stream(
+        cs, iter_scale_trace(p["n_requests"], rate=p["rate"],
+                             seed=p["seed"]), w_p=4.0)
+    return {"name": "replay_scale", "preset": preset, **p, **rep.row()}
+
+
+def scale_equivalence_row(n: int = 2000) -> dict:
+    """Reference vs vectorized event loop on the same seeded trace slice:
+    per-request output timestamps, finish times and preemption counts
+    must be IDENTICAL (the tentpole's equivalence contract; the full
+    matrix lives in tests/test_vector_sim.py)."""
+    from repro.sim import iter_scale_trace
+    results = {}
+    for vector in (False, True):
+        cs = _scale_cluster(4, vector=vector)
+        reqs = list(iter_scale_trace(n, rate=600.0, seed=7))
+        rep = replay_sim(cs, reqs, w_p=4.0)
+        per_req = [(tuple(r.out_times), r.finish_time, r.preemptions)
+                   for r in reqs]
+        row = {k: v for k, v in rep.row().items()
+               if k not in NONDETERMINISTIC_KEYS}
+        results[vector] = (per_req, row)
+    identical = results[False] == results[True]
+    assert identical, "vectorized sim diverged from the reference loop"
+    return {"name": "replay_scale", "preset": f"equivalence-n{n}",
+            "n_requests": n, "identical_per_request": identical,
+            **results[True][1]}
+
+
+def replay_scale(fast: bool = True) -> list[dict]:
+    rows = [scale_equivalence_row(), run_scale_preset("ci")]
+    if not fast:
+        rows.append(run_scale_preset("full"))
+    write_scale_bench(rows)
+    return rows
+
+
+def write_scale_bench(rows: list[dict],
+                      path: str = "BENCH_replay_scale.json") -> str:
+    """Merge scale rows into the repo-root trajectory file, keyed by
+    preset (a fast run updates ``ci`` without dropping ``full``)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, path)
+    payload = {"schema": 1,
+               "generated_by": "benchmarks/run.py --only replay_scale",
+               "presets": {}}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                old = json.load(f)
+            if old.get("schema") == 1:
+                payload["presets"].update(old.get("presets", {}))
+        except (OSError, ValueError):
+            pass
+    for r in rows:
+        payload["presets"][r["preset"]] = {k: v for k, v in r.items()
+                                           if k not in ("name", "preset")}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    return path
+
+
+def check_scale_row(row: dict, ref_path: str) -> list[str]:
+    """Compare a fresh preset run against the checked-in trajectory file.
+
+    Trace generation and the event loop are bit-deterministic, but the
+    estimator fit goes through LAPACK least squares, whose last-ulp
+    results vary across BLAS builds and can flip near-tie scheduling
+    decisions — so metric comparison is tight-tolerance, not bitwise:
+    counts (submitted/n) exact, ratio metrics within 0.02, completion
+    counts within 0.5%.  Same-machine reruns match exactly; the bitwise
+    per-request equivalence contract is enforced by
+    ``scale_equivalence_row`` / tests/test_vector_sim.py."""
+    try:
+        with open(ref_path) as f:
+            ref = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"{ref_path}: unreadable ({e})"]
+    want = ref.get("presets", {}).get(row["preset"])
+    if want is None:
+        return [f"{ref_path}: no entry for preset {row['preset']!r}"]
+    errors = []
+    for k, v in row.items():
+        if k in NONDETERMINISTIC_KEYS or k in ("name", "preset"):
+            continue
+        w = want.get(k)
+        if k in ("submitted", "n", "n_requests", "rate", "seed",
+                 "replicas"):
+            ok = w == v
+        elif k in ("completed", "rejected"):
+            ok = w is not None and abs(w - v) <= max(5, 0.005 * row["n"])
+        elif isinstance(v, float) and isinstance(w, (int, float)):
+            ok = abs(w - v) <= 0.02 * max(1.0, abs(v))
+        else:
+            ok = w == v
+        if not ok:
+            errors.append(f"{row['preset']}.{k}: measured {v!r} vs "
+                          f"checked-in {w!r} (outside tolerance)")
+    return errors
+
+
+def main(argv=None) -> int:
+    import argparse
+    import sys
+    ap = argparse.ArgumentParser(
+        description="scale replay presets (vectorized ClusterSim)")
+    ap.add_argument("--preset", choices=sorted(SCALE_PRESETS),
+                    default="ci")
+    ap.add_argument("--budget", type=float, default=None,
+                    help="fail if the replay exceeds this wall-clock "
+                         "budget in seconds (CI sim-scale gate)")
+    ap.add_argument("--check", default=None,
+                    help="BENCH_replay_scale.json to compare the "
+                         "deterministic metrics against")
+    ap.add_argument("--equivalence", action="store_true",
+                    help="also run the reference-vs-vectorized "
+                         "per-request equivalence cross-check")
+    args = ap.parse_args(argv)
+
+    failures = []
+    if args.equivalence:
+        row = scale_equivalence_row()
+        print(json.dumps(row, indent=1))
+    row = run_scale_preset(args.preset)
+    print(json.dumps(row, indent=1))
+    if args.budget is not None and row["wall_s"] > args.budget:
+        failures.append(f"wall {row['wall_s']}s > budget {args.budget}s")
+    if args.check:
+        failures += check_scale_row(row, args.check)
+    for msg in failures:
+        print(f"FAIL: {msg}", file=sys.stderr)
+    if failures:
+        return 1
+    print(f"OK: preset {args.preset} in {row['wall_s']}s"
+          + (f" (budget {args.budget}s)" if args.budget else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

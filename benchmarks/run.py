@@ -20,6 +20,10 @@ BENCHES = [
     ("replay_router_sweep", replay_bench.replay_router_sweep),
     ("replay_shared_prefix", replay_bench.replay_shared_prefix),
     ("replay_overlap", replay_bench.replay_overlap),
+    # trajectory benches: also write BENCH_replay_scale.json /
+    # BENCH_engine_step.json at the repo root (docs/BENCHMARKS.md)
+    ("replay_scale", replay_bench.replay_scale),
+    ("engine_step", replay_bench.engine_step),
     ("fig2_partition_vs_colocation", paper_figures.fig2_partition_vs_colocation),
     ("fig3_priority_first_vs_fcfs", paper_figures.fig3_priority_first_vs_fcfs),
     ("fig4to8_policy_load_sweeps", paper_figures.fig4to8_policy_load_sweeps),

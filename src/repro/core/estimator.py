@@ -33,6 +33,9 @@ WorkItem = tuple[int, int, bool]
 
 def _features(items: Iterable[WorkItem]) -> np.ndarray:
     """Aggregate batch features [sum l_q^2, sum l_q*l_kv, sum l_q, sum l_kv_d, n_d, 1]."""
+    items = list(items)
+    if len(items) >= 32:
+        return _features_cols(*_as_cols(items))
     f = np.zeros(6, dtype=np.float64)
     for l_q, l_kv, is_prefill in items:
         if is_prefill:
@@ -42,6 +45,30 @@ def _features(items: Iterable[WorkItem]) -> np.ndarray:
         else:
             f[3] += float(l_kv) + l_q  # decode reads ctx incl. current token
             f[4] += 1.0
+    f[5] = 1.0
+    return f
+
+
+def _as_cols(items: Sequence[WorkItem]):
+    arr = np.asarray(items, dtype=np.float64)
+    return arr[:, 0], arr[:, 1], arr[:, 2] != 0.0
+
+
+def _features_cols(l_q: np.ndarray, l_kv: np.ndarray,
+                   is_prefill: np.ndarray) -> np.ndarray:
+    """Columnar `_features`, bitwise identical to the scalar loop: masked
+    rows contribute +0.0 (exact for these non-negative terms) and each
+    column is reduced with the sequential ``np.add.accumulate`` — the
+    pairwise ``np.sum`` would NOT reproduce the loop's rounding."""
+    f = np.zeros(6, dtype=np.float64)
+    if l_q.size:
+        pf = is_prefill.astype(np.float64)
+        df = 1.0 - pf
+        f[0] = np.add.accumulate(pf * (l_q * l_q))[-1]
+        f[1] = np.add.accumulate(pf * (l_q * l_kv))[-1]
+        f[2] = np.add.accumulate(pf * l_q)[-1]
+        f[3] = np.add.accumulate(df * (l_kv + l_q))[-1]
+        f[4] = np.add.accumulate(df)[-1]
     f[5] = 1.0
     return f
 
@@ -83,6 +110,17 @@ class BatchLatencyEstimator:
         coef = np.array([self.a_p, self.b_p, self.c_p,
                          self.a_d, self.b_d, self.t_c])
         return float(_features(items) @ coef)
+
+    def batch_time_cols(self, l_q: Sequence[int], l_kv: Sequence[int],
+                        is_prefill: Sequence[bool]) -> float:
+        """``batch_time`` over pre-split columns (vectorized schedulers);
+        bitwise identical to the tuple-list form."""
+        coef = np.array([self.a_p, self.b_p, self.c_p,
+                         self.a_d, self.b_d, self.t_c])
+        f = _features_cols(np.asarray(l_q, np.float64),
+                           np.asarray(l_kv, np.float64),
+                           np.asarray(is_prefill, bool))
+        return float(f @ coef)
 
     # --- fitting ----------------------------------------------------------
     @classmethod

@@ -102,6 +102,10 @@ class EngineStats:
     # back to the synchronous path; first one is logged by the worker)
     t_block_measured: float = 0.0  # EWMA per-block copy time (closed loop)
     refit_failures: int = 0        # online estimator refits that failed
+    decode_launches: int = 0       # jitted decode calls (one per step with
+    # decode work; fused or logits path)
+    host_syncs: int = 0            # device->host fetches in the hot loop —
+    # the perf gate asserts exactly one per model launch (no hidden syncs)
     # bounded: long-lived replicas must not grow without limit
     batch_latencies: deque = field(
         default_factory=lambda: deque(maxlen=512))
@@ -116,7 +120,8 @@ class Engine:
                  prefix_cache: bool = True,
                  cache_blocks: Optional[int] = None,
                  packed_prefill: bool = True,
-                 overlap_transfers: bool = True):
+                 overlap_transfers: bool = True,
+                 fused_decode: bool = True):
         self.cfg = cfg
         self.params = params
         self.eng_cfg = eng_cfg
@@ -135,6 +140,11 @@ class Engine:
             a_p=1e-8, b_p=1e-8, c_p=1e-5, a_d=1e-8, b_d=1e-4, t_c=1e-3)
         # --- overlapped execution (packed prefill + async transfer lanes)
         self.packed_prefill = packed_prefill
+        # fused decode: argmax on device, batch/table padded to shape
+        # buckets so the jit cache persists across steps (see
+        # model_exec.decode_step); the logits path is kept as a safety
+        # hatch and for the fused-vs-unfused perf/equivalence gate
+        self.fused_decode = fused_decode
         self.overlap_transfers = overlap_transfers
         self.worker: Optional[TransferWorker] = (
             TransferWorker() if overlap_transfers else None)
@@ -395,7 +405,7 @@ class Engine:
         # --- decode batch ---------------------------------------------------
         if decode_entries:
             rids = [e.req.rid for e in decode_entries]
-            lens = np.array([e.l_kv for e in decode_entries], np.int32)
+            nb = len(decode_entries)
             for e in decode_entries:
                 self.pool.ensure_capacity(e.req.rid, e.l_kv + 1)
                 if self.pool.ensure_writable(e.req.rid,
@@ -403,13 +413,33 @@ class Engine:
                     self.bm.note_fork(e.req)
                     self.stats.cow_forks += 1
             maxp = max(len(self.pool.tables[r]) for r in rids)
-            table = self.pool.table_array(rids, maxp=maxp)
-            last = np.array(
-                [self._last_token(e.req) for e in decode_entries], np.int32)
-            logits, self.pool.kv = model_exec.decode_batch(
-                self.cfg, self.params, self.pool.kv, jnp.asarray(last),
-                table, jnp.asarray(lens))
-            nxt = np.asarray(jnp.argmax(logits, -1))
+            if self.fused_decode:
+                # pad batch/table to shape buckets (extra rows: token 0,
+                # len 0, null-block table) and fetch only the (B,) argmax
+                b_b = model_exec.seg_bucket(nb)
+                maxp_b = model_exec.table_bucket(maxp)
+                lens = np.zeros(b_b, np.int32)
+                lens[:nb] = [e.l_kv for e in decode_entries]
+                last = np.zeros(b_b, np.int32)
+                last[:nb] = [self._last_token(e.req)
+                             for e in decode_entries]
+                table = self.pool.table_array(rids, maxp=maxp_b, rows=b_b)
+                toks, self.pool.kv = model_exec.decode_step(
+                    self.cfg, self.params, self.pool.kv,
+                    jnp.asarray(last), table, jnp.asarray(lens))
+                nxt = np.asarray(toks)[:nb]
+            else:
+                lens = np.array([e.l_kv for e in decode_entries], np.int32)
+                table = self.pool.table_array(rids, maxp=maxp)
+                last = np.array(
+                    [self._last_token(e.req) for e in decode_entries],
+                    np.int32)
+                logits, self.pool.kv = model_exec.decode_batch(
+                    self.cfg, self.params, self.pool.kv, jnp.asarray(last),
+                    table, jnp.asarray(lens))
+                nxt = np.asarray(jnp.argmax(logits, -1))
+            self.stats.decode_launches += 1
+            self.stats.host_syncs += 1
             for e, tok in zip(decode_entries, nxt):
                 self._emit(e.req, int(tok), emitted)
 
@@ -536,6 +566,7 @@ class Engine:
             jnp.asarray(tables), jnp.asarray(ctx_lens),
             jnp.asarray(last_idx), smax, sq)
         self.stats.packed_prefill_calls += 1
+        self.stats.host_syncs += 1
         nxt = np.asarray(jnp.argmax(logits, -1))
         for i, e in enumerate(entries):
             r = e.req
@@ -564,6 +595,7 @@ class Engine:
                 table, jnp.asarray([ctx], jnp.int32), max_ctx)
             self.stats.prefill_tokens += e.n_tokens
             if ctx + e.n_tokens >= r.prompt_len and r.generated == 0:
+                self.stats.host_syncs += 1
                 tok = int(jnp.argmax(logits[0, e.n_tokens - 1]))
                 self._finish_prefill(e, tok, emitted)
             # recompute completion emits nothing (next decode pass does)

@@ -64,9 +64,13 @@ class PagedKVPool:
             self.decref(b)
         self.host.pop(rid, None)
 
-    def table_array(self, rids: list[int], maxp: Optional[int] = None):
+    def table_array(self, rids: list[int], maxp: Optional[int] = None,
+                    rows: Optional[int] = None):
+        """Padded block-table batch.  ``rows`` > len(rids) appends all-zero
+        rows (the fused decode path pads the batch to a shape bucket;
+        zero rows address the reserved null block 0)."""
         maxp = maxp or max(len(self.tables[r]) for r in rids)
-        out = np.zeros((len(rids), maxp), np.int32)
+        out = np.zeros((rows or len(rids), maxp), np.int32)
         for i, r in enumerate(rids):
             t = self.tables[r]
             out[i, :len(t)] = t

@@ -34,10 +34,11 @@ def _mlp(cfg, lp, h):
     return swiglu(h, lp["mlp"]) if cfg.act == "swiglu" else gelu_mlp(h, lp["mlp"])
 
 
-@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
-def decode_batch(cfg: ArchConfig, params, pool_kv, tokens, tables, lens):
-    """tokens: (B,) int32; tables: (B, maxp); lens: (B,) context BEFORE
-    this step.  Returns (logits (B, V), new pool)."""
+def _decode_forward(cfg: ArchConfig, params, pool_kv, tokens, tables, lens):
+    """Shared decode forward pass (traced by both ``decode_batch`` and the
+    fused ``decode_step`` so the two jit variants run the identical graph).
+    tokens: (B,) int32; tables: (B, maxp); lens: (B,) context BEFORE this
+    step.  Returns (logits (B, V), new pool)."""
     b = tokens.shape[0]
     bs = pool_kv.shape[3]
     x = params["embed"][tokens][:, None, :].astype(pool_kv.dtype)
@@ -73,6 +74,32 @@ def decode_batch(cfg: ArchConfig, params, pool_kv, tokens, tables, lens):
     x = apply_norm(x, params["ln_f"], cfg.norm)
     logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"])[:, 0]
     return logits, pool_kv
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
+def decode_batch(cfg: ArchConfig, params, pool_kv, tokens, tables, lens):
+    """One token for B requests, returning the full logits for host-side
+    sampling.  tokens: (B,) int32; tables: (B, maxp); lens: (B,) context
+    BEFORE this step.  Returns (logits (B, V), new pool)."""
+    return _decode_forward(cfg, params, pool_kv, tokens, tables, lens)
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
+def decode_step(cfg: ArchConfig, params, pool_kv, tokens, tables, lens):
+    """Fused decode step: the same forward pass as ``decode_batch`` with
+    the greedy argmax folded into the jitted graph, so the device->host
+    fetch shrinks from (B, V) float logits to (B,) int32 tokens.
+
+    The batch dimension may be padded to a bucket (``seg_bucket``) and the
+    table width to ``table_bucket``: padding rows carry token 0, length 0
+    and an all-zero table row, so their single K/V write lands in the
+    reserved null block 0 (the packed-prefill convention) and their output
+    token is garbage the caller discards.  Real rows are unaffected — every
+    per-row computation is independent and the paged-attention kernel masks
+    table entries past ``lens``."""
+    logits, pool_kv = _decode_forward(cfg, params, pool_kv, tokens, tables,
+                                      lens)
+    return jnp.argmax(logits, -1).astype(jnp.int32), pool_kv
 
 
 @functools.partial(jax.jit, static_argnums=(0, 6), donate_argnums=(2,))
@@ -239,6 +266,15 @@ def chunk_bucket(n: int) -> int:
     attention score tile is (G*sq, smax), so the plain pow2 tail would pad
     a 160-token chunk's scores by 1.6x."""
     return bucket(n) if n <= 128 else _geom_bucket(n, 128)
+
+
+def table_bucket(p: int) -> int:
+    """Bucket for the decode block-table width (maxp): {2^k, 1.5*2^k}
+    steps from 4.  Together with ``seg_bucket`` on the batch dimension this
+    makes the decode jit cache persistent across steps — batches of
+    (B in 5..6, maxp in 9..12) all hit one compiled variant instead of
+    compiling per exact shape."""
+    return _geom_bucket(p, 4)
 
 
 def seg_bucket(s: int) -> int:

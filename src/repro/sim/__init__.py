@@ -5,17 +5,22 @@ from .executor import (AnalyticalExecutor, InstanceHardware, ModelProfile,
                        HBM_BYTES, HOST_LINK_BW)
 from .engine_sim import DecodeAllPolicy, EngineSim, StepResult
 from .cluster import ClusterConfig, ClusterSim, HANDOFF_DELAY
-from .workloads import WORKLOADS, WorkloadSpec
-from .metrics import Summary, summarize, gain_timeline, urgent_timeout_timeline
+from .vector import VectorClusterSim, VectorSlideBatching, vectorize_policy
+from .workloads import (WORKLOADS, WorkloadSpec, SCALE_SPEC,
+                        iter_scale_trace, scale_mix)
+from .metrics import (StreamingSummary, Summary, summarize, gain_timeline,
+                      urgent_timeout_timeline)
 from .replay import (ReplayReport, clip_lengths, replay_frontend,
-                     replay_sim, synth_prompt)
+                     replay_sim, replay_sim_stream, synth_prompt)
 
 __all__ = [
     "AnalyticalExecutor", "InstanceHardware", "ModelProfile", "QWEN2_7B",
     "QWEN3_32B", "PEAK_FLOPS", "HBM_BW", "ICI_BW", "HBM_BYTES",
     "HOST_LINK_BW", "DecodeAllPolicy", "EngineSim", "StepResult",
-    "ClusterConfig", "ClusterSim", "HANDOFF_DELAY", "WORKLOADS",
-    "WorkloadSpec", "Summary", "summarize", "gain_timeline",
-    "urgent_timeout_timeline", "ReplayReport", "clip_lengths",
-    "replay_frontend", "replay_sim", "synth_prompt",
+    "ClusterConfig", "ClusterSim", "HANDOFF_DELAY", "VectorClusterSim",
+    "VectorSlideBatching", "vectorize_policy", "WORKLOADS", "WorkloadSpec",
+    "SCALE_SPEC", "iter_scale_trace", "scale_mix", "StreamingSummary",
+    "Summary", "summarize", "gain_timeline", "urgent_timeout_timeline",
+    "ReplayReport", "clip_lengths", "replay_frontend", "replay_sim",
+    "replay_sim_stream", "synth_prompt",
 ]

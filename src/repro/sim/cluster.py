@@ -67,6 +67,9 @@ class ClusterSim:
         self.decode_target: dict[int, int] = {}   # rid -> decode iid (disagg)
         self.finished: list[Request] = []
         self.dropped: list[Request] = []
+        # streaming mode (run_stream): finished requests are handed to this
+        # callback instead of accumulating in self.finished
+        self.on_finished = None
         for _ in range(cluster_cfg.n_prefill):
             self._new_instance(prefill=True)
         for _ in range(cluster_cfg.n_decode):
@@ -146,6 +149,52 @@ class ClusterSim:
         return requests
 
     # ------------------------------------------------------------------
+    def run_stream(self, request_iter, *, until: Optional[float] = None,
+                   on_finished=None) -> int:
+        """``run`` with O(1)-memory arrivals: requests are pulled lazily
+        from ``request_iter`` (MUST be sorted by arrival) and finished
+        requests are handed to ``on_finished`` instead of accumulating —
+        the 10⁵⁺-request replay entry point.
+
+        Event ordering is identical to ``run``: there, every arrival gets
+        a lower heap sequence number than any derived event, so an arrival
+        wins any timestamp tie — here the pending arrival is taken while
+        ``arrival <= heap[0] time``.  Kills/scale-ups are not supported in
+        streaming mode.  Returns the number of requests submitted.
+        """
+        seq = itertools.count()
+        heap: list[tuple[float, int, int, object]] = []
+        self.on_finished = on_finished
+        it = iter(request_iter)
+        nxt = next(it, None)
+        n_seen = 0
+        last_hb = 0.0
+        try:
+            while nxt is not None or heap:
+                if nxt is not None and (not heap
+                                        or nxt.arrival <= heap[0][0]):
+                    now, kind, payload = nxt.arrival, ARRIVAL, nxt
+                    nxt = next(it, None)
+                else:
+                    now, _, kind, payload = heapq.heappop(heap)
+                if until is not None and now > until:
+                    break
+                if now - last_hb >= self.ccfg.heartbeat_interval:
+                    self._heartbeat(now)
+                    last_hb = now
+                if kind == ARRIVAL:
+                    n_seen += 1
+                    self._dispatch(payload, now, heap, seq)
+                elif kind == STEP:
+                    self._step(payload, now, heap, seq)
+                elif kind == HANDOFF:
+                    req, d_iid, tokens = payload
+                    self._arrive_decode(req, d_iid, tokens, now, heap, seq)
+        finally:
+            self.on_finished = None
+        return n_seen
+
+    # ------------------------------------------------------------------
     def _heartbeat(self, now: float) -> None:
         for iid, eng in self.engines.items():
             self.states[iid].b_f = eng.bm.free_blocks
@@ -204,7 +253,10 @@ class ClusterSim:
                 self._handoff(r, eng, res.end, heap, seq)
         for r in res.finished:
             st.on_finished(r.rid)
-            self.finished.append(r)
+            if self.on_finished is not None:
+                self.on_finished(r)
+            else:
+                self.finished.append(r)
         heapq.heappush(heap, (res.end, next(seq), STEP, iid))
 
     def _handoff(self, req: Request, p_eng: EngineSim, now: float,

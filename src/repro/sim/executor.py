@@ -92,14 +92,30 @@ class AnalyticalExecutor:
         if not items:
             return 0.0
         m = self.model
-        flops = 0.0
-        kv_read = 0.0
-        new_tokens = 0
-        for l_q, l_kv, is_prefill in items:
-            flops += 2.0 * m.n_active * l_q
-            flops += 4.0 * m.n_layers * m.d_model * l_q * (l_kv + l_q / 2.0)
-            kv_read += (l_kv + l_q) * m.kv_bytes_per_token
-            new_tokens += l_q
+        if len(items) >= 32:
+            # vectorized path, bitwise identical to the loop below: the two
+            # per-item flops terms are interleaved into one array so the
+            # sequential np.add.accumulate reproduces the loop's exact
+            # rounding (np.sum's pairwise reduction would not)
+            arr = np.asarray(items, dtype=np.float64)
+            l_q, l_kv = arr[:, 0], arr[:, 1]
+            terms = np.empty(2 * len(items))
+            terms[0::2] = 2.0 * m.n_active * l_q
+            terms[1::2] = 4.0 * m.n_layers * m.d_model * l_q \
+                * (l_kv + l_q / 2.0)
+            flops = float(np.add.accumulate(terms)[-1])
+            kv_read = float(np.add.accumulate(
+                (l_kv + l_q) * m.kv_bytes_per_token)[-1])
+            new_tokens = int(arr[:, 0].astype(np.int64).sum())
+        else:
+            flops = 0.0
+            kv_read = 0.0
+            new_tokens = 0
+            for l_q, l_kv, is_prefill in items:
+                flops += 2.0 * m.n_active * l_q
+                flops += 4.0 * m.n_layers * m.d_model * l_q * (l_kv + l_q / 2.0)
+                kv_read += (l_kv + l_q) * m.kv_bytes_per_token
+                new_tokens += l_q
         weight_read = m.n_params * m.dtype_bytes      # once per batch
         kv_write = new_tokens * m.kv_bytes_per_token
         compute_s = flops / self.hw.flops_per_s

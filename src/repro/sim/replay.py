@@ -26,7 +26,7 @@ from typing import Iterable, Optional
 import numpy as np
 
 from ..core.request import Request, SLO
-from .metrics import Summary, summarize
+from .metrics import StreamingSummary, Summary, summarize
 
 
 @dataclass
@@ -201,6 +201,34 @@ def replay_sim(cluster, requests: list[Request], *, w_p: float = 1.0,
         n_rejected=len(cluster.dropped), wall=wall, speed=float("inf"))
 
 
+def replay_sim_stream(cluster, requests: Iterable[Request], *,
+                      w_p: float = 1.0, w_d: float = 1.0,
+                      release: bool = True) -> ReplayReport:
+    """``replay_sim`` at 10⁵⁺-request scale: arrivals stream from an
+    iterator (sorted by arrival — e.g. ``workloads.iter_scale_trace``) and
+    metrics fold incrementally as requests finish, so neither the trace
+    nor per-request metric lists are ever fully resident.  With
+    ``release`` each finished request's token-timestamp list is freed
+    after folding.  Dropped (router-rejected) requests fold in at the end,
+    exactly as ``summarize`` counts them in the list path."""
+    agg = StreamingSummary(w_p=w_p, w_d=w_d)
+
+    def fold(r: Request) -> None:
+        agg.add(r)
+        if release:
+            r.out_times.clear()
+
+    t0 = time.monotonic()
+    n = cluster.run_stream(requests, on_finished=fold)
+    wall = time.monotonic() - t0
+    done = agg.n
+    for r in cluster.dropped:
+        agg.add(r)
+    return ReplayReport(
+        summary=agg.summary(), n_submitted=n, n_completed=done,
+        n_rejected=len(cluster.dropped), wall=wall, speed=float("inf"))
+
+
 # --------------------------------------------------------------------------
 # CLI
 # --------------------------------------------------------------------------
@@ -232,6 +260,18 @@ def _main(argv: Optional[list] = None) -> None:
     ap.add_argument("--w-p", type=float, default=4.0,
                     help="first-token gain weight")
     ap.add_argument("--no-prefix-cache", action="store_true")
+    ap.add_argument("--n-requests", type=int, default=None,
+                    help="sim mode: generate exactly N requests at --rate "
+                         "via the streaming scale generator "
+                         "(iter_scale_trace; --workload/--duration ignored)")
+    ap.add_argument("--stream", action="store_true",
+                    help="sim mode: constant-memory streaming replay "
+                         "(arrivals from an iterator, metrics folded "
+                         "incrementally; required for 10⁵⁺ requests)")
+    ap.add_argument("--vector", action="store_true",
+                    help="sim mode: vectorized scheduler hot path "
+                         "(VectorClusterSim — identical per-request "
+                         "results, minutes instead of hours at scale)")
     ap.add_argument("--speed", type=float, default=200.0,
                     help="frontend mode: trace-time compression (200 = "
                          "replay 200x faster than the trace)")
@@ -244,24 +284,35 @@ def _main(argv: Optional[list] = None) -> None:
     from ..core import (EngineConfig, GoRouting, MinLoad, RoundRobin,
                         RouterConfig, make_policy)
 
-    reqs = WORKLOADS[args.workload](rate=args.rate, duration=args.duration,
-                                    seed=args.seed)
+    if args.n_requests is not None and args.mode == "sim":
+        from .workloads import iter_scale_trace
+        reqs = iter_scale_trace(args.n_requests, rate=args.rate,
+                                seed=args.seed)
+    else:
+        reqs = WORKLOADS[args.workload](rate=args.rate,
+                                        duration=args.duration,
+                                        seed=args.seed)
     if args.mode == "sim":
         from .cluster import ClusterConfig, ClusterSim
         from .executor import (AnalyticalExecutor, InstanceHardware,
                                QWEN2_7B)
+        from .vector import VectorClusterSim
         ex = AnalyticalExecutor(QWEN2_7B, InstanceHardware(chips=4))
         est, _ = ex.fit_estimator(n=200)
         router = {"gorouting": lambda: GoRouting(
                       est, RouterConfig(pd_mode="coloc")),
                   "min_load": lambda: MinLoad(est),
                   "round_robin": lambda: RoundRobin()}[args.router]()
-        cs = ClusterSim(lambda: make_policy(args.sched), router, ex, est,
-                        EngineConfig(w_p=args.w_p),
-                        ClusterConfig(pd_mode="coloc",
-                                      n_prefill=args.replicas,
-                                      prefix_cache=not args.no_prefix_cache))
-        rep = replay_sim(cs, reqs, w_p=args.w_p)
+        sim_cls = VectorClusterSim if args.vector else ClusterSim
+        cs = sim_cls(lambda: make_policy(args.sched), router, ex, est,
+                     EngineConfig(w_p=args.w_p),
+                     ClusterConfig(pd_mode="coloc",
+                                   n_prefill=args.replicas,
+                                   prefix_cache=not args.no_prefix_cache))
+        if args.stream:
+            rep = replay_sim_stream(cs, reqs, w_p=args.w_p)
+        else:
+            rep = replay_sim(cs, list(reqs), w_p=args.w_p)
         extra = {"prefill_tokens": sum(e.prefill_tokens
                                        for e in cs.engines.values())}
     else:

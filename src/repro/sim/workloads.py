@@ -221,6 +221,55 @@ def shared_prefix(rate: float, duration: float, seed: int = 0,
     return reqs
 
 
+SCALE_SPEC = WorkloadSpec("scale_mix", mean_in=360, mean_out=64,
+                          priorities=(1, 2, 3), weights=(4.0, 2.0, 1.0),
+                          prio_probs=(0.2, 0.35, 0.45))
+
+
+def iter_scale_trace(n_requests: int, *, rate: float = 200.0, seed: int = 0,
+                     spec: Optional[WorkloadSpec] = None, chunk: int = 8192):
+    """Streaming 10⁵–10⁶-request trace generator (docs/WORKLOADS.md).
+
+    Yields exactly ``n_requests`` 3-priority requests in arrival order
+    (Poisson arrivals at ``rate``/s, lognormal lengths) while holding only
+    ``chunk`` requests' worth of RNG output at a time — pair it with
+    ``ClusterSim.run_stream`` for constant-memory replay.  The tuple
+    ``(n_requests, rate, seed, spec, chunk)`` fully determines the trace:
+    RNG draws are batched per chunk, so the same arguments always
+    reproduce the same requests (but a different ``chunk`` is a DIFFERENT
+    trace — treat it as part of the trace identity).
+    """
+    spec = spec or SCALE_SPEC
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    remaining = n_requests
+    while remaining > 0:
+        k = min(chunk, remaining)
+        arrivals = t + np.cumsum(rng.exponential(1.0 / rate, size=k))
+        t = float(arrivals[-1])
+        in_lens = _lognormal_lengths(rng, spec.mean_in, 0.9, 8, 4096, k)
+        out_lens = _lognormal_lengths(rng, spec.mean_out, 0.9, 4, 512, k)
+        prio, wts = _assign_priority(rng, spec, k)
+        yield from _build(arrivals, in_lens, out_lens, prio, wts, spec,
+                          rng=rng)
+        remaining -= k
+
+
+def scale_mix(rate: float, duration: float, seed: int = 0,
+              spec: Optional[WorkloadSpec] = None) -> list[Request]:
+    """List-form ``iter_scale_trace`` wrapper taking the same
+    ``(rate, duration, seed)`` arguments as the ``WORKLOADS`` generators
+    (``n = rate * duration`` requests).
+
+    Count-sized: the last arrivals routinely land past ``duration``
+    (Poisson gaps, fixed n), so this is NOT in the ``WORKLOADS``
+    registry, whose contract bounds arrivals to ``[0, duration)``.
+    Use ``--n-requests`` in the replay CLI instead of ``--workload``.
+    """
+    n = max(1, int(rate * duration))
+    return list(iter_scale_trace(n, rate=rate, seed=seed, spec=spec))
+
+
 WORKLOADS: dict[str, Callable] = {
     "sharegpt": sharegpt,
     "azure": azure,

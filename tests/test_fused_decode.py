@@ -1,0 +1,72 @@
+"""Fused decode step (model_exec.decode_step): token streams must stay
+bitwise identical to the logits-fetch path despite on-device argmax and
+batch/table shape bucketing, and the hot loop must do exactly one
+device->host fetch per model launch."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import EngineConfig, Request, SLO, make_policy
+from repro.models import init_params
+from repro.serving import Engine
+from repro.serving.model_exec import seg_bucket, table_bucket
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_smoke("qwen1_5_0_5b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _run(cfg, params, fused, n=6, plen=48):
+    # varied output lengths: the decode batch SHRINKS over the run, so
+    # the fused path crosses several (B, maxp) buckets
+    rng = np.random.default_rng(0)
+    eng = Engine(cfg, params, EngineConfig(eta=1.0, w_p=4.0, tau=1e9),
+                 make_policy("slidebatching"), num_blocks=256,
+                 block_size=16, max_ctx=512, fused_decode=fused)
+    trace = []
+    for _ in range(n):
+        r = Request(prompt_len=plen, output_len=int(rng.integers(3, 9)),
+                    arrival=0.0, slo=SLO(3600.0, 3600.0), priority=2)
+        trace.append(r)
+        eng.add_request(r,
+                        rng.integers(1, cfg.vocab, plen).astype(np.int32))
+    eng.run_until_drained(max_iters=2000)
+    outs = {i: eng.outputs[r.rid] for i, r in enumerate(trace)}
+    stats = eng.stats
+    eng.kill()
+    return outs, stats
+
+
+def test_fused_stream_bitwise_identical(model):
+    cfg, params = model
+    outs_fused, st_fused = _run(cfg, params, True)
+    outs_logits, st_logits = _run(cfg, params, False)
+    assert outs_fused == outs_logits
+    # same scheduling -> same launch structure on both paths
+    assert st_fused.decode_launches == st_logits.decode_launches
+    assert st_fused.decode_launches > 0
+
+
+def test_host_sync_accounting(model):
+    """One fetch per launch: any hidden sync added to the step path
+    breaks this exact count (the perf-smoke gate's invariant)."""
+    cfg, params = model
+    _, st = _run(cfg, params, True)
+    assert st.host_syncs == st.decode_launches + st.packed_prefill_calls
+
+
+def test_shape_buckets():
+    assert [seg_bucket(s) for s in (1, 2, 3, 5, 8, 9, 17)] == \
+        [1, 2, 4, 8, 8, 16, 24]
+    assert table_bucket(1) == 4
+    assert table_bucket(5) == 6
+    assert table_bucket(7) == 8
+    assert table_bucket(13) == 16
+    # monotone and idempotent on its own outputs
+    for p in range(1, 64):
+        b = table_bucket(p)
+        assert b >= p and table_bucket(b) == b

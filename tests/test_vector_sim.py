@@ -1,0 +1,233 @@
+"""Vectorized ClusterSim equivalence contract (docs/ARCHITECTURE.md):
+the columnar SlideBatching fast path and the streamed event loop must
+reproduce the reference simulator EXACTLY — per-request token
+timestamps, finish times, preemption counts, and all derived metrics —
+on seeded traces across priority mixes, overload, PD modes, prefix
+caching, kills, and ablation flags."""
+import numpy as np
+import pytest
+
+from repro.core import (EngineConfig, GoRouting, Request, RouterConfig,
+                        SLO)
+from repro.core.slidebatching import SlideBatching
+from repro.sim import (AnalyticalExecutor, ClusterConfig, ClusterSim,
+                       InstanceHardware, QWEN2_7B, StreamingSummary,
+                       VectorClusterSim, VectorSlideBatching,
+                       iter_scale_trace, replay_sim, replay_sim_stream,
+                       summarize, vectorize_policy)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+@pytest.fixture(scope="module")
+def exec_est():
+    ex = AnalyticalExecutor(QWEN2_7B, InstanceHardware(chips=4))
+    est, _ = ex.fit_estimator(n=200)
+    return ex, est
+
+
+def make_cluster(ex, est, vector, *, pd_mode="coloc", n_prefill=2,
+                 n_decode=0, prefix_cache=True, policy_kw=None):
+    cls = VectorClusterSim if vector else ClusterSim
+    return cls(lambda: SlideBatching(**(policy_kw or {})),
+               GoRouting(est, RouterConfig(pd_mode=pd_mode)),
+               ex, est, EngineConfig(w_p=4.0),
+               ClusterConfig(pd_mode=pd_mode, n_prefill=n_prefill,
+                             n_decode=n_decode, prefix_cache=prefix_cache))
+
+
+def signature(reqs):
+    return [(tuple(r.out_times), r.finish_time, r.preemptions)
+            for r in reqs]
+
+
+def run_pair(ex, est, trace_fn, *, kills=None, **kw):
+    """The same seeded trace through reference and vectorized sims;
+    returns (sig_ref, sig_vec, row_ref, row_vec)."""
+    out = {}
+    for vector in (False, True):
+        cs = make_cluster(ex, est, vector, **kw)
+        reqs = trace_fn()
+        if kills:
+            cs.run(reqs, kills=kills)
+            row = summarize(reqs, w_p=4.0).row()
+        else:
+            row = {k: v for k, v in
+                   replay_sim(cs, reqs, w_p=4.0).row().items()
+                   if k not in ("wall_s", "speed")}
+        out[vector] = (signature(reqs), row)
+    return out[False] + out[True]
+
+
+# ---------------------------------------------------------------------------
+# exact equivalence across configurations
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pd_mode,prefix_cache", [
+    ("coloc", True), ("coloc", False), ("disagg", True)])
+def test_equivalence_matrix(exec_est, pd_mode, prefix_cache):
+    ex, est = exec_est
+    kw = {}
+    if pd_mode == "disagg":
+        kw = {"n_prefill": 1, "n_decode": 1}
+    sig_ref, row_ref, sig_vec, row_vec = run_pair(
+        ex, est, lambda: list(iter_scale_trace(400, rate=600.0, seed=7)),
+        pd_mode=pd_mode, prefix_cache=prefix_cache, **kw)
+    assert sig_ref == sig_vec
+    assert row_ref == row_vec
+
+
+def test_equivalence_overload(exec_est):
+    """Heavy overload on one replica: rejections, preemptions and
+    starvation promotion all fire, and every per-request outcome still
+    matches the reference loop exactly."""
+    ex, est = exec_est
+    sig_ref, row_ref, sig_vec, row_vec = run_pair(
+        ex, est, lambda: list(iter_scale_trace(300, rate=1200.0, seed=3)),
+        n_prefill=1)
+    assert sig_ref == sig_vec
+    assert row_ref == row_vec
+    assert row_ref["slo"] < 1.0      # genuinely contended, not a no-op run
+
+
+@pytest.mark.parametrize("policy_kw", [
+    {"use_density": False}, {"use_deadline": False},
+    {"latency_aware_budget": False}])
+def test_equivalence_ablations(exec_est, policy_kw):
+    ex, est = exec_est
+    sig_ref, row_ref, sig_vec, row_vec = run_pair(
+        ex, est, lambda: list(iter_scale_trace(250, rate=700.0, seed=11)),
+        policy_kw=policy_kw)
+    assert sig_ref == sig_vec
+    assert row_ref == row_vec
+
+
+def test_equivalence_with_kills(exec_est):
+    """Instance failure mid-run (requeue + rerouting) through both loops."""
+    ex, est = exec_est
+    sig_ref, row_ref, sig_vec, row_vec = run_pair(
+        ex, est, lambda: list(iter_scale_trace(200, rate=500.0, seed=5)),
+        kills=[(0.4, 0)], n_prefill=3)
+    assert sig_ref == sig_vec
+    assert row_ref == row_vec
+
+
+# ---------------------------------------------------------------------------
+# streamed loop + streamed metrics
+# ---------------------------------------------------------------------------
+
+def test_run_stream_matches_run(exec_est):
+    """``run_stream`` (lazy arrivals, completion callback, no finished
+    list) must schedule identically to ``run`` on the same trace, and
+    ``StreamingSummary`` must reproduce ``summarize`` on the same
+    request set."""
+    ex, est = exec_est
+    trace = lambda: list(iter_scale_trace(300, rate=600.0, seed=9))  # noqa: E731
+
+    cs = make_cluster(ex, est, True)
+    reqs = trace()
+    cs.run(reqs)
+    ref_sig = signature(reqs)
+    ref_sum = summarize(reqs, w_p=4.0)
+
+    cs2 = make_cluster(ex, est, True)
+    got = []
+    n = cs2.run_stream(iter(trace()), on_finished=got.append)
+    got.sort(key=lambda r: r.rid)
+    assert n == len(reqs)
+    # dropped (rejected) requests are folded after the run, like
+    # replay_sim_stream does
+    done = {r.rid for r in got}
+    got += [r for r in cs2.dropped if r.rid not in done]
+    got.sort(key=lambda r: r.rid)
+    assert signature(got) == ref_sig
+
+    agg = StreamingSummary(w_p=4.0)
+    for r in got:
+        agg.add(r)
+    assert agg.summary() == ref_sum
+
+
+def test_replay_sim_stream_report(exec_est):
+    """End-to-end streamed replay: report equals the list-mode replay's,
+    and with ``release=True`` no token-timestamp lists stay resident."""
+    ex, est = exec_est
+    trace = lambda: iter_scale_trace(300, rate=600.0, seed=13)  # noqa: E731
+
+    ref = replay_sim(make_cluster(ex, est, True), list(trace()), w_p=4.0)
+    cs = make_cluster(ex, est, True)
+    rep = replay_sim_stream(cs, trace(), w_p=4.0)
+    strip = ("wall_s", "speed")
+    assert ({k: v for k, v in rep.row().items() if k not in strip} ==
+            {k: v for k, v in ref.row().items() if k not in strip})
+
+
+# ---------------------------------------------------------------------------
+# tie-breaking order
+# ---------------------------------------------------------------------------
+
+def _tie_trace(seed: int) -> list[Request]:
+    """Many requests with identical lengths/weights and coinciding
+    arrivals: φ densities and deadlines tie constantly, so ordering is
+    decided purely by the sort's tie-breaking (stability + arrival key) —
+    exactly what the vectorized lexsort must replicate."""
+    rng = np.random.default_rng(seed)
+    reqs, t = [], 0.0
+    for _ in range(50):
+        if rng.random() < 0.4:
+            t += float(rng.choice([0.02, 0.05]))
+        prio = int(rng.choice([1, 2, 3]))
+        reqs.append(Request(
+            prompt_len=int(rng.choice([64, 64, 128])),
+            output_len=int(rng.choice([8, 8, 16])),
+            arrival=t, slo=SLO(ttft=1.0, tpot=0.1), priority=prio,
+            weight={1: 4.0, 2: 2.0, 3: 1.0}[prio]))
+    return reqs
+
+
+def _check_tie_breaking(exec_est, seed):
+    ex, est = exec_est
+    sigs = {}
+    for vector in (False, True):
+        cs = make_cluster(ex, est, vector, n_prefill=1)
+        reqs = _tie_trace(seed)
+        cs.run(reqs)
+        sigs[vector] = signature(reqs)
+    assert sigs[False] == sigs[True]
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_tie_breaking_order(exec_est, seed):
+        _check_tie_breaking(exec_est, seed)
+else:                                                  # pragma: no cover
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5, 6, 7])
+    def test_tie_breaking_order(exec_est, seed):
+        _check_tie_breaking(exec_est, seed)
+
+
+# ---------------------------------------------------------------------------
+# policy swap plumbing
+# ---------------------------------------------------------------------------
+
+def test_vectorize_policy_swaps_only_plain_slidebatching():
+    plain = SlideBatching()
+    vec = vectorize_policy(plain)
+    assert type(vec) is VectorSlideBatching
+    assert (vec.use_density, vec.use_deadline, vec.latency_aware_budget) \
+        == (plain.use_density, plain.use_deadline,
+            plain.latency_aware_budget)
+
+    custom = SlideBatching(use_density=False)
+    assert vectorize_policy(custom).use_density is False
+
+    class Sub(SlideBatching):
+        pass
+    sub = Sub()
+    assert vectorize_policy(sub) is sub        # subclasses pass through

@@ -12,9 +12,15 @@ import sys
 
 LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
 
+# docs that must exist — the docs/*.md glob silently skips missing files,
+# so a deleted BENCHMARKS.md would otherwise pass the link check
+REQUIRED = ("README.md", "docs/ARCHITECTURE.md", "docs/BENCHMARKS.md",
+            "docs/WORKLOADS.md")
+
 
 def check(root: pathlib.Path) -> list[str]:
-    errors = []
+    errors = [f"{rel}: required doc missing" for rel in REQUIRED
+              if not (root / rel).exists()]
     files = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
     for md in files:
         if not md.exists():

@@ -1,19 +1,27 @@
-"""Wall-clock sanity check for the overlapped execution engine.
+"""Wall-clock sanity check for the engine hot loop.
 
-Runs the same prefill-heavy request set through two smoke-scale engines —
-baseline (per-request prefill, synchronous transfers) vs overlapped
-(packed prefill + async transfer lanes) — and asserts that
+Runs the same request sets through smoke-scale engines in contrasting
+configurations and asserts that
 
-  * both produce byte-identical token streams, and
-  * the overlapped engine's prefill throughput (prompt tokens/s) improves
-    by at least ``--min-speedup`` (a deliberately conservative CI gate;
-    see benchmarks/replay_bench.py:replay_overlap for the measured
-    numbers).
+  * baseline (per-request prefill, sync transfers) vs overlapped (packed
+    prefill + async lanes) produce byte-identical token streams and the
+    overlapped engine's prefill throughput improves by at least
+    ``--min-speedup``;
+  * logits-fetch decode vs fused decode (argmax on device, shapes padded
+    to persistent jit buckets) produce byte-identical token streams and
+    fused decode-step latency does not exceed the logits path by more
+    than ``--max-fused-ratio``;
+  * the hot loop performs exactly ONE device->host fetch per model
+    launch: ``stats.host_syncs == decode_launches + packed_prefill_calls``
+    (any hidden sync added to the step path fails the gate).
 
 Each configuration gets one warm-up pass so JIT compilation does not
-pollute the comparison.
+pollute the comparison.  ``--bench-out`` writes the measurements as
+``BENCH_engine_step.json`` (see docs/BENCHMARKS.md); ``--bench-check``
+validates a checked-in copy against the current run's gates.
 
     PYTHONPATH=src python tools/perf_smoke.py [--min-speedup 1.1]
+    PYTHONPATH=src python tools/perf_smoke.py --bench-out BENCH_engine_step.json
 """
 from __future__ import annotations
 
@@ -30,29 +38,42 @@ from repro.core import EngineConfig, Request, SLO, make_policy
 from repro.models import init_params
 from repro.serving import Engine
 
+BENCH_SCHEMA = 1
+
 
 def build_engine(cfg, params, *, packed: bool, overlap: bool,
-                 max_ctx: int = 1024) -> Engine:
+                 fused: bool = True, max_ctx: int = 1024) -> Engine:
     # max_ctx matches the Engine default: the per-request fallback stages
     # the full max_ctx span per chunk, which is precisely the quadratic
     # term the packed path eliminates
     return Engine(cfg, params, EngineConfig(eta=1.0, w_p=4.0, tau=1e9),
                   make_policy("slidebatching"), num_blocks=512,
                   block_size=16, max_ctx=max_ctx,
-                  packed_prefill=packed, overlap_transfers=overlap)
+                  packed_prefill=packed, overlap_transfers=overlap,
+                  fused_decode=fused)
 
 
-def make_trace(cfg, n_req: int, prompt_len: int, out_len: int, seed: int):
+def make_trace(cfg, n_req: int, prompt_len: int, out_len: int, seed: int,
+               vary_out: bool = False):
+    """``vary_out`` draws per-request output lengths in
+    [out_len/2, out_len], so the decode batch SHRINKS over the run —
+    the shape churn that makes bucketed jit caching matter."""
     rng = np.random.default_rng(seed)
-    return [(Request(prompt_len=prompt_len, output_len=out_len, arrival=0.0,
-                     slo=SLO(3600.0, 3600.0), priority=2),
-             rng.integers(1, cfg.vocab, prompt_len).astype(np.int32))
-            for _ in range(n_req)]
+    reqs = []
+    for _ in range(n_req):
+        ol = (int(rng.integers(max(1, out_len // 2), out_len + 1))
+              if vary_out else out_len)
+        reqs.append((Request(prompt_len=prompt_len, output_len=ol,
+                             arrival=0.0, slo=SLO(3600.0, 3600.0),
+                             priority=2),
+                     rng.integers(1, cfg.vocab, prompt_len).astype(np.int32)))
+    return reqs
 
 
-def run_once(cfg, params, trace, *, packed: bool,
-             overlap: bool) -> tuple[dict, dict]:
-    eng = build_engine(cfg, params, packed=packed, overlap=overlap)
+def run_once(cfg, params, trace, *, packed: bool, overlap: bool,
+             fused: bool = True) -> tuple[dict, dict]:
+    eng = build_engine(cfg, params, packed=packed, overlap=overlap,
+                       fused=fused)
     for req, prompt in trace:
         eng.add_request(req, prompt)
     t0 = time.monotonic()
@@ -61,16 +82,146 @@ def run_once(cfg, params, trace, *, packed: bool,
     outputs = {i: eng.outputs[req.rid] for i, (req, _) in enumerate(trace)}
     decode_tokens = eng.stats.tokens_out - len(trace)  # first tokens excluded
     row = {
-        "packed": packed, "overlap": overlap, "wall_s": round(wall, 3),
+        "packed": packed, "overlap": overlap, "fused": fused,
+        "wall_s": round(wall, 3),
         "prefill_tokens": eng.stats.prefill_tokens,
         "prefill_tok_per_s": round(eng.stats.prefill_tokens / wall, 1),
         "decode_tokens": decode_tokens,
         "tpot_proxy_ms": round(1e3 * wall / max(decode_tokens, 1), 3),
         "iterations": eng.stats.iterations,
         "packed_calls": eng.stats.packed_prefill_calls,
+        "decode_launches": eng.stats.decode_launches,
+        "host_syncs": eng.stats.host_syncs,
+        # no-hidden-syncs accounting: exactly one fetch per model launch
+        # (the fallback prefill path does one extra fetch per finishing
+        # chunk, so the invariant is only asserted for packed engines)
+        "hot_loop_fetches_ok": (
+            not packed or eng.stats.host_syncs ==
+            eng.stats.decode_launches + eng.stats.packed_prefill_calls),
     }
     eng.kill()
     return row, outputs
+
+
+def measure_overlap(cfg, params, args, out_len):
+    """Baseline vs overlapped engine on the same trace (both fused)."""
+    rows, streams = [], {}
+    for packed, overlap in ((False, False), (True, True)):
+        for _warm in (True, False):
+            trace = make_trace(cfg, args.requests, args.prompt_len,
+                               out_len, args.seed)
+            row, outs = run_once(cfg, params, trace, packed=packed,
+                                 overlap=overlap)
+        rows.append(row)
+        streams[(packed, overlap)] = outs
+    return rows, streams[(False, False)] == streams[(True, True)]
+
+
+def measure_fused(cfg, params, args):
+    """Logits-fetch vs fused decode on a decode-heavy trace with varied
+    output lengths (batch shrinks over the run, exercising the bucketed
+    jit cache instead of one compile per exact batch shape)."""
+    rows, streams = [], {}
+    for fused in (False, True):
+        for _warm in (True, False):
+            trace = make_trace(cfg, args.requests, args.prompt_len // 2,
+                               args.decode_len * 2, args.seed,
+                               vary_out=True)
+            row, outs = run_once(cfg, params, trace, packed=True,
+                                 overlap=True, fused=fused)
+        rows.append(row)
+        streams[fused] = outs
+    return rows, streams[False] == streams[True]
+
+
+def collect(args) -> tuple[dict, list[str]]:
+    """Run every measurement; return (bench payload, failure messages)."""
+    cfg = get_smoke("qwen1_5_0_5b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    # prefill-heavy trace: one output token, so wall time IS prefill time
+    (base_p, fast_p), same_p = measure_overlap(cfg, params, args, 1)
+    # decode trace: several output tokens; the overlap engine leaves the
+    # decode path alone, so its TPOT must not regress
+    (base_d, fast_d), same_d = measure_overlap(cfg, params, args,
+                                               args.decode_len)
+    (logits_row, fused_row), same_f = measure_fused(cfg, params, args)
+
+    speedup = fast_p["prefill_tok_per_s"] / max(base_p["prefill_tok_per_s"],
+                                                1e-9)
+    tpot_ratio = fast_d["tpot_proxy_ms"] / max(base_d["tpot_proxy_ms"],
+                                               1e-9)
+    fused_ratio = fused_row["tpot_proxy_ms"] / max(
+        logits_row["tpot_proxy_ms"], 1e-9)
+
+    failures = []
+    if not (same_p and same_d):
+        failures.append("token streams diverged between baseline and "
+                        "overlapped engines")
+    if not same_f:
+        failures.append("token streams diverged between logits and fused "
+                        "decode")
+    if speedup < args.min_speedup:
+        failures.append(f"prefill speedup {speedup:.2f}x < "
+                        f"{args.min_speedup}x gate")
+    if tpot_ratio > args.max_tpot_ratio:
+        failures.append(f"decode TPOT ratio {tpot_ratio:.2f}x > "
+                        f"{args.max_tpot_ratio}x gate")
+    if fused_ratio > args.max_fused_ratio:
+        failures.append(f"fused decode TPOT ratio {fused_ratio:.2f}x > "
+                        f"{args.max_fused_ratio}x gate")
+    for row in (fast_p, fast_d, logits_row, fused_row):
+        if not row["hot_loop_fetches_ok"]:
+            failures.append(
+                "hidden host sync: host_syncs=%d != decode_launches=%d + "
+                "packed_calls=%d" % (row["host_syncs"],
+                                     row["decode_launches"],
+                                     row["packed_calls"]))
+
+    payload = {
+        "schema": BENCH_SCHEMA,
+        "model": "qwen1_5_0_5b (smoke scale)",
+        "generated_by": "tools/perf_smoke.py --bench-out",
+        "prefill": {"baseline": base_p, "overlapped": fast_p,
+                    "speedup": round(speedup, 2)},
+        "decode": {"baseline": base_d, "overlapped": fast_d,
+                   "tpot_ratio": round(tpot_ratio, 2)},
+        "decode_fusion": {"logits": logits_row, "fused": fused_row,
+                          "fused_tpot_ratio": round(fused_ratio, 2),
+                          "streams_identical": same_f},
+        "streams_identical": same_p and same_d and same_f,
+        "gates": {"min_prefill_speedup": args.min_speedup,
+                  "max_tpot_ratio": args.max_tpot_ratio,
+                  "max_fused_ratio": args.max_fused_ratio,
+                  "passed": not failures},
+    }
+    return payload, failures
+
+
+def check_bench_file(path: str, payload: dict) -> list[str]:
+    """Validate a checked-in BENCH_engine_step.json: schema + the
+    correctness facts (identical streams, gates passed) must hold in the
+    committed trajectory point.  Wall-clock numbers are trajectory data,
+    not compared exactly — the current run is gated on its own ratios."""
+    errors = []
+    try:
+        with open(path) as f:
+            ref = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable ({e})"]
+    if ref.get("schema") != BENCH_SCHEMA:
+        errors.append(f"{path}: schema {ref.get('schema')!r} != "
+                      f"{BENCH_SCHEMA}")
+    for section in ("prefill", "decode", "decode_fusion", "gates"):
+        if section not in ref:
+            errors.append(f"{path}: missing section {section!r}")
+    if not ref.get("streams_identical", False):
+        errors.append(f"{path}: committed run has streams_identical=false")
+    if not ref.get("gates", {}).get("passed", False):
+        errors.append(f"{path}: committed run did not pass its gates")
+    if not payload["gates"]["passed"]:
+        errors.append("current run failed its gates (see above)")
+    return errors
 
 
 def main(argv=None) -> int:
@@ -87,54 +238,35 @@ def main(argv=None) -> int:
     ap.add_argument("--max-tpot-ratio", type=float, default=1.3,
                     help="CI gate: overlapped decode TPOT may not exceed "
                          "baseline by more than this factor")
+    ap.add_argument("--max-fused-ratio", type=float, default=1.2,
+                    help="CI gate: fused decode TPOT may not exceed the "
+                         "logits-fetch path by more than this factor "
+                         "(typically measured at or below 1.0)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--bench-out", default=None,
+                    help="write the measurements as BENCH_engine_step.json")
+    ap.add_argument("--bench-check", default=None,
+                    help="validate a checked-in BENCH_engine_step.json")
     args = ap.parse_args(argv)
 
-    cfg = get_smoke("qwen1_5_0_5b")
-    params = init_params(cfg, jax.random.PRNGKey(0))
-
-    def measure(out_len):
-        rows, streams = [], {}
-        for packed, overlap in ((False, False), (True, True)):
-            for warm in (True, False):
-                trace = make_trace(cfg, args.requests, args.prompt_len,
-                                   out_len, args.seed)
-                row, outs = run_once(cfg, params, trace, packed=packed,
-                                     overlap=overlap)
-            rows.append(row)
-            streams[(packed, overlap)] = outs
-        return rows, streams[(False, False)] == streams[(True, True)]
-
-    # prefill-heavy trace: one output token, so wall time IS prefill time
-    (base_p, fast_p), same_p = measure(1)
-    # decode trace: several output tokens; decode path is untouched by the
-    # overlap engine, so its TPOT must not regress
-    (base_d, fast_d), same_d = measure(args.decode_len)
-
-    speedup = fast_p["prefill_tok_per_s"] / max(base_p["prefill_tok_per_s"],
-                                                1e-9)
-    tpot_ratio = fast_d["tpot_proxy_ms"] / max(base_d["tpot_proxy_ms"],
-                                               1e-9)
-    print(json.dumps({
-        "prefill": {"baseline": base_p, "overlapped": fast_p,
-                    "speedup": round(speedup, 2)},
-        "decode": {"baseline": base_d, "overlapped": fast_d,
-                   "tpot_ratio": round(tpot_ratio, 2)},
-        "streams_identical": same_p and same_d}, indent=1))
-    if not (same_p and same_d):
-        print("FAIL: token streams diverged between baseline and "
-              "overlapped engines", file=sys.stderr)
+    payload, failures = collect(args)
+    print(json.dumps(payload, indent=1))
+    if args.bench_out:
+        with open(args.bench_out, "w") as f:
+            json.dump(payload, f, indent=1)
+            f.write("\n")
+        print(f"wrote {args.bench_out}")
+    if args.bench_check:
+        failures += check_bench_file(args.bench_check, payload)
+    for msg in failures:
+        print(f"FAIL: {msg}", file=sys.stderr)
+    if failures:
         return 1
-    if speedup < args.min_speedup:
-        print(f"FAIL: prefill speedup {speedup:.2f}x < "
-              f"{args.min_speedup}x gate", file=sys.stderr)
-        return 1
-    if tpot_ratio > args.max_tpot_ratio:
-        print(f"FAIL: decode TPOT ratio {tpot_ratio:.2f}x > "
-              f"{args.max_tpot_ratio}x gate", file=sys.stderr)
-        return 1
-    print(f"OK: {speedup:.2f}x prefill throughput, decode TPOT ratio "
-          f"{tpot_ratio:.2f}x, identical streams")
+    print(f"OK: {payload['prefill']['speedup']:.2f}x prefill throughput, "
+          f"decode TPOT ratio {payload['decode']['tpot_ratio']:.2f}x, "
+          f"fused decode ratio "
+          f"{payload['decode_fusion']['fused_tpot_ratio']:.2f}x, "
+          "identical streams, no hidden host syncs")
     return 0
 
 
