@@ -51,6 +51,18 @@ SCALE_PRESETS = {
              "replicas": 8},
 }
 
+# thrash-regime preset for the tiered KV cache (run_tiered_preset): the
+# shared-prefix working set (n_groups * prefix_len) is 2x the device-side
+# prefix cache, and the request rate is low enough that groups go
+# unpinned between uses — so the cache continually evicts live prefixes.
+# HBM-only destroys them (recompute); the tiered cache spills them to the
+# host tier and restores over the H2D lane (int8-cold past the host
+# budget), which must win on both TTFT p50 and recomputed prefill tokens.
+TIERED_PRESET = {
+    "rate": 8.0, "duration": 30.0, "seed": 13, "replicas": 1,
+    "n_groups": 8, "prefix_len": 1024, "p_shared": 0.9,
+}
+
 
 def replay_router_sweep(fast: bool = True) -> list[dict]:
     ex, est, _ = get_exec()
@@ -245,6 +257,72 @@ def run_scale_preset(preset: str) -> dict:
     return {"name": "replay_scale", "preset": preset, **p, **rep.row()}
 
 
+def run_tiered_preset() -> dict:
+    """Tiered-KV thrash replay: the identical shared-prefix trace through
+    three cache configurations (no cache / HBM-only destroy-on-evict /
+    host-tier spill with int8 cold demotion), reported as one flat row
+    keyed ``tiered`` in BENCH_replay_scale.json.  Token counts are
+    emitted as floats so the CI check compares them with the same 2%
+    tolerance as the other scale metrics (BLAS-build estimator jitter can
+    shift a few scheduling near-ties); the pass/fail gates are the
+    booleans, recomputed on every run."""
+    ex, est, _ = get_exec()
+    p = TIERED_PRESET
+    working = p["n_groups"] * (p["prefix_len"] // ex.block_size)
+    cache_frac = (working / 2) / ex.num_blocks     # HBM ~ 1/2 working set
+    variants = {
+        "cache_off": dict(prefix_cache=False),
+        "hbm_only": dict(prefix_cache=True, cache_frac=cache_frac),
+        "tiered": dict(prefix_cache=True, cache_frac=cache_frac,
+                       host_tier_blocks=working),
+    }
+    row = {"name": "replay_scale", "preset": "tiered", **p,
+           "hbm_cache_blocks": working // 2, "host_tier_blocks": working}
+    for label, kw in variants.items():
+        reqs = WORKLOADS["shared_prefix"](
+            rate=p["rate"], duration=p["duration"], seed=p["seed"],
+            n_groups=p["n_groups"], prefix_len=p["prefix_len"],
+            p_shared=p["p_shared"])
+        row.setdefault("n_requests", len(reqs))
+        cs = ClusterSim(lambda: make_policy("slidebatching"),
+                        GoRouting(est, RouterConfig(pd_mode="coloc")),
+                        ex, est, EngineConfig(w_p=4.0),
+                        ClusterConfig(pd_mode="coloc",
+                                      n_prefill=p["replicas"], **kw))
+        rep = replay_sim(cs, reqs, w_p=4.0)
+        engines = list(cs.engines.values())
+        r = rep.row()
+        row[f"ttft_p50_{label}"] = r["ttft_p50"]
+        row[f"slo_{label}"] = r["slo"]
+        row[f"prefill_tokens_{label}"] = float(
+            sum(e.prefill_tokens for e in engines))
+        caches = [e.prefix_cache for e in engines if e.prefix_cache]
+        row[f"spilled_blocks_{label}"] = float(
+            sum(c.spilled_blocks for c in caches))
+        row[f"restored_blocks_{label}"] = float(
+            sum(c.restored_blocks for c in caches))
+    row["tiered_beats_hbm_ttft"] = (
+        row["ttft_p50_tiered"] < row["ttft_p50_hbm_only"])
+    row["tiered_beats_hbm_prefill"] = (
+        row["prefill_tokens_tiered"] < row["prefill_tokens_hbm_only"])
+    return row
+
+
+def tiered_gate_failures(row: dict) -> list[str]:
+    out = []
+    if not row["tiered_beats_hbm_ttft"]:
+        out.append("tiered TTFT p50 %.4fs did not beat HBM-only %.4fs"
+                   % (row["ttft_p50_tiered"], row["ttft_p50_hbm_only"]))
+    if not row["tiered_beats_hbm_prefill"]:
+        out.append("tiered prefill tokens %d did not beat HBM-only %d"
+                   % (row["prefill_tokens_tiered"],
+                      row["prefill_tokens_hbm_only"]))
+    if not row["restored_blocks_tiered"] > 0:
+        out.append("tiered replay restored no spilled blocks — the trace "
+                   "is not in the thrash regime")
+    return out
+
+
 def scale_equivalence_row(n: int = 2000) -> dict:
     """Reference vs vectorized event loop on the same seeded trace slice:
     per-request output timestamps, finish times and preemption counts
@@ -269,7 +347,9 @@ def scale_equivalence_row(n: int = 2000) -> dict:
 
 
 def replay_scale(fast: bool = True) -> list[dict]:
-    rows = [scale_equivalence_row(), run_scale_preset("ci")]
+    tiered = run_tiered_preset()
+    assert not tiered_gate_failures(tiered), tiered_gate_failures(tiered)
+    rows = [scale_equivalence_row(), run_scale_preset("ci"), tiered]
     if not fast:
         rows.append(run_scale_preset("full"))
     write_scale_bench(rows)
@@ -357,12 +437,21 @@ def main(argv=None) -> int:
     ap.add_argument("--equivalence", action="store_true",
                     help="also run the reference-vs-vectorized "
                          "per-request equivalence cross-check")
+    ap.add_argument("--tiered", action="store_true",
+                    help="also run the tiered-KV thrash replay and gate "
+                         "tiered > HBM-only on TTFT p50 + prefill tokens")
     args = ap.parse_args(argv)
 
     failures = []
     if args.equivalence:
         row = scale_equivalence_row()
         print(json.dumps(row, indent=1))
+    if args.tiered:
+        trow = run_tiered_preset()
+        print(json.dumps(trow, indent=1))
+        failures += tiered_gate_failures(trow)
+        if args.check:
+            failures += check_scale_row(trow, args.check)
     row = run_scale_preset(args.preset)
     print(json.dumps(row, indent=1))
     if args.budget is not None and row["wall_s"] > args.budget:

@@ -41,6 +41,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional, Protocol
 
+from .estimator import COLD_WIRE_RATIO
 from .request import Request
 
 
@@ -74,6 +75,9 @@ class ReqBlocks:
     # blocks of a live device-resident request also appear there.)
     shared_blocks: int = 0  # table blocks charged to the prefix cache, not
     # to used_blocks (cache-referenced; possibly shared with other requests)
+    cold_tokens: int = 0    # host span demoted to the int8 cold tier; the
+    # tier demotes WHOLE groups, so this is 0 or == host_tokens, and a
+    # reload of a cold group crosses the wire at COLD_WIRE_RATIO width
 
     def computed_tokens(self) -> int:
         return self.dev_tokens + self.host_tokens
@@ -90,10 +94,14 @@ class TransferLane:
     busy_until: float = 0.0
     total_blocks: int = 0
 
-    def enqueue(self, now: float, n_blocks: int) -> float:
-        """Schedule n blocks; returns completion time."""
+    def enqueue(self, now: float, n_blocks: int,
+                wire_scale: float = 1.0) -> float:
+        """Schedule n blocks; returns completion time.  ``wire_scale``
+        shrinks the occupancy of narrow-wire copies (cold-tier int8
+        blocks at COLD_WIRE_RATIO); the default 1.0 is exact — x*1.0 is
+        bitwise x — so legacy callers are unchanged."""
         start = max(now, self.busy_until)
-        self.busy_until = start + n_blocks * self.t_block
+        self.busy_until = start + n_blocks * self.t_block * wire_scale
         self.total_blocks += n_blocks
         return self.busy_until
 
@@ -113,7 +121,8 @@ class BlockManager:
                  t_block: float, *, async_offload: bool = True,
                  adaptive_copy: bool = True, recompute_only: bool = False,
                  n_off_by_priority: Optional[dict[int, int]] = None,
-                 beta: float = 1.5, t_block_alpha: float = 0.25):
+                 beta: float = 1.5, t_block_alpha: float = 0.25,
+                 host_budget_blocks: Optional[int] = None):
         self.num_device_blocks = num_device_blocks
         self.block_size = block_size
         self.t_block = t_block
@@ -143,6 +152,34 @@ class BlockManager:
         self.external_lanes = False
         self.offload_sink: Optional[callable] = None
         self.t_block_alpha = t_block_alpha
+        # --- host-tier byte budget (simulator mirror of KVTierStore) -----
+        # With a budget, evicted-to-host spans beyond it demote LRU whole
+        # groups to the int8 cold tier (cold_tokens): reloads then cross
+        # the wire at COLD_WIRE_RATIO width.  None = unbounded host tier
+        # (legacy).  The real engine drives residency from the actual
+        # KVTierStore instead and leaves this None.
+        self.host_budget_blocks = host_budget_blocks
+        self._host_touch: dict[int, int] = {}
+        self._host_clock = 0
+
+    def _touch_host(self, rid: int) -> None:
+        self._host_clock += 1
+        self._host_touch[rid] = self._host_clock
+
+    def _enforce_host_budget(self) -> None:
+        """Demote LRU hot host groups to cold until the hot span fits the
+        budget (mirrors ``KVTierStore._enforce``; whole groups only)."""
+        if self.host_budget_blocks is None:
+            return
+        while True:
+            hot = [(rid, s) for rid, s in self.table.items()
+                   if s.host_tokens and not s.cold_tokens]
+            over = (sum(blocks_for(s.host_tokens, self.block_size)
+                        for _, s in hot) - self.host_budget_blocks)
+            if over <= 0 or not hot:
+                return
+            victim = min(hot, key=lambda e: self._host_touch.get(e[0], 0))
+            victim[1].cold_tokens = victim[1].host_tokens
 
     # ------------------------------------------------------------------
     def state(self, req: Request) -> ReqBlocks:
@@ -316,6 +353,9 @@ class BlockManager:
         s.dev_tokens = 0
         s.mirrored_blocks = 0
         s.restore_pending = 0   # nothing device-resident left to materialize
+        s.cold_tokens = 0       # fresh eviction lands hot; budget may demote
+        self._touch_host(req.rid)
+        self._enforce_host_budget()
         self.used_blocks -= freed
         s.shared_blocks = 0
         if self.cache is not None:
@@ -324,15 +364,23 @@ class BlockManager:
 
     # --- adaptive copy-budget control (§4.3) --------------------------------
     def copy_budget(self, t_fwd_min: float, t_trans_max: float,
-                    t_budget: float, b_missing: int) -> int:
-        """B_copy by the paper's 3-case procedure."""
+                    t_budget: float, b_missing: int,
+                    t_block_eff: Optional[float] = None) -> int:
+        """B_copy by the paper's 3-case procedure.
+
+        ``t_block_eff`` is the tier-aware mean per-block transfer time of
+        the missing set (cold int8 blocks cross the wire at
+        COLD_WIRE_RATIO width); callers pass it ONLY when cold blocks
+        are present, so the all-hot path stays bitwise-legacy on
+        ``self.t_block``."""
         if not self.adaptive_copy:
             return b_missing          # "w/o dynamic": always copy everything
         if self.t_block <= 0:
             return b_missing
+        tb = self.t_block if t_block_eff is None else t_block_eff
         if t_fwd_min > t_budget:
             # batch time is pinned at the latency budget: hide copies under it
-            return int(t_budget // self.t_block)
+            return int(t_budget // tb)
         if t_fwd_min >= t_trans_max:
             return b_missing          # compute dominates: copy all, fully hidden
         # case 2(ii): binary-search largest B_copy whose transfer time still
@@ -342,7 +390,7 @@ class BlockManager:
         lo, hi = 0, b_missing
         while lo < hi:
             mid = (lo + hi + 1) // 2
-            trans = mid * self.t_block
+            trans = mid * tb
             recompute = (b_missing - mid) * self.t_block  # conservative proxy:
             # recomputing a dropped block costs at least its copy time on TPU
             # (prefill of s_blk tokens vs 32GB/s PCIe copy) — refined by the
@@ -402,7 +450,18 @@ class BlockManager:
         s.dev_tokens += restore_tokens
         s.host_tokens -= restore_tokens
         s.restore_pending += need   # engine: copy these blocks H2D
-        done = self.h2d.enqueue(now, plan.restore_blocks)
+        # cold groups ride the int8 wire: same block count, ~4x fewer
+        # bytes, so the lane is occupied for COLD_WIRE_RATIO of the time.
+        # The hot path keeps the exact legacy enqueue (wire_scale 1.0).
+        if s.cold_tokens > 0:
+            done = self.h2d.enqueue(now, plan.restore_blocks,
+                                    COLD_WIRE_RATIO)
+        else:
+            done = self.h2d.enqueue(now, plan.restore_blocks)
         if plan.drop_host_tokens:
             s.host_tokens = max(0, s.host_tokens - plan.drop_host_tokens)
+        if s.cold_tokens:
+            # whole-group tiers: what remains on host stays cold
+            s.cold_tokens = s.host_tokens
+        self._touch_host(req.rid)
         return done

@@ -30,6 +30,12 @@ import numpy as np
 #   l_kv : KV context length already cached BEFORE this pass
 WorkItem = tuple[int, int, bool]
 
+# Wire-byte ratio of a cold (int8 + per-plane fp32 scales) KV block to a
+# hot (fp32) one: the H2D copy of a cold-tier reload moves ~4x fewer
+# bytes (see kernels/kv_quant.py); its on-device dequant is fused into
+# the staging scatter and is bandwidth-trivial next to the PCIe copy.
+COLD_WIRE_RATIO = 0.25
+
 
 def _features(items: Iterable[WorkItem]) -> np.ndarray:
     """Aggregate batch features [sum l_q^2, sum l_q*l_kv, sum l_q, sum l_kv_d, n_d, 1]."""
@@ -104,6 +110,16 @@ class BatchLatencyEstimator:
         if is_prefill:
             return self.prefill_time(l_q, l_kv)
         return self.decode_time(l_kv + l_q)
+
+    def reload_time(self, hot_blocks: int, cold_blocks: int,
+                    t_block: float) -> float:
+        """Tier-aware H2D reload estimate: hot (fp32) blocks cost a full
+        ``t_block`` each, cold (int8) blocks only ``COLD_WIRE_RATIO`` of
+        it — the copy-budget control (core/blocks.py, SlideBatching)
+        uses this so cold-tier restores are priced by what actually
+        crosses the wire.  ``cold_blocks == 0`` reproduces the legacy
+        ``blocks * t_block`` bitwise."""
+        return (hot_blocks + COLD_WIRE_RATIO * cold_blocks) * t_block
 
     def batch_time(self, items: Iterable[WorkItem]) -> float:
         """T(B), Eq. (7)."""

@@ -23,6 +23,7 @@ from __future__ import annotations
 from collections import OrderedDict
 from typing import Optional
 
+from .estimator import COLD_WIRE_RATIO
 from .request import Request
 
 
@@ -104,6 +105,20 @@ class _SimEntry:
         self.weight = weight
 
 
+class _SimSpilled:
+    """A cache entry whose blocks were evicted to the host tier instead of
+    destroyed (sim mirror of the real radix cache's spill-on-evict).
+    ``cold`` marks entries demoted past the host budget into the int8
+    cold tier — their restore crosses the wire at COLD_WIRE_RATIO."""
+    __slots__ = ("blocks", "last_used", "weight", "cold")
+
+    def __init__(self, blocks: int, last_used: float, weight: float):
+        self.blocks = blocks
+        self.last_used = last_used
+        self.weight = weight
+        self.cold = False
+
+
 class SimPrefixCache:
     """Group-identity prefix cache for one simulated instance.
 
@@ -116,17 +131,28 @@ class SimPrefixCache:
     """
 
     def __init__(self, block_size: int, max_blocks: int,
-                 priority_bonus: float = 30.0):
+                 priority_bonus: float = 30.0, *, spill: bool = False,
+                 host_budget_blocks: Optional[int] = None):
         self.block_size = block_size
         self.max_blocks = max_blocks
         self.priority_bonus = priority_bonus
+        # KV tiering mirror (serving/kv_pool.KVTierStore): with ``spill``
+        # on, reclaimed entries move to a host tier instead of being
+        # destroyed; a ``host_budget_blocks`` cap demotes LRU spilled
+        # entries to the int8 cold tier, whose restores occupy the H2D
+        # lane for only COLD_WIRE_RATIO of the hot time.
+        self.spill = spill
+        self.host_budget_blocks = host_budget_blocks
         self.bm = None                       # set by the owning engine
         self.entries: dict[int, _SimEntry] = {}
+        self.spilled: dict[int, _SimSpilled] = {}
         self._pins: dict[int, set[int]] = {}      # group -> rids
         self._rid_group: dict[int, int] = {}
         self.hits = 0
         self.hit_tokens = 0
         self.evicted_blocks = 0
+        self.spilled_blocks = 0
+        self.restored_blocks = 0
 
     # --- capacity ------------------------------------------------------
     @property
@@ -143,6 +169,8 @@ class SimPrefixCache:
     def match(self, req: Request, now: float) -> int:
         """Cached tokens usable by ``req`` (0 if its group is cold)."""
         e = self.entries.get(req.prefix_group)
+        if e is None and self.spilled.get(req.prefix_group) is not None:
+            e = self._restore(req.prefix_group, now)
         if e is None:
             return 0
         n = min(e.blocks, self._usable_blocks(req))
@@ -167,6 +195,10 @@ class SimPrefixCache:
             return 0
         e = self.entries.get(req.prefix_group)
         if e is None:
+            # re-adoption: the inserting request just recomputed a spilled
+            # prefix on device — the host-tier copy is superseded (the real
+            # cache re-links the node to the request's table blocks)
+            self.spilled.pop(req.prefix_group, None)
             e = self.entries[req.prefix_group] = _SimEntry(0, now, req.weight)
         adopted = max(0, target - e.blocks)
         e.blocks = max(e.blocks, target)
@@ -176,8 +208,11 @@ class SimPrefixCache:
         return adopted
 
     def peek_tokens(self, req: Request) -> int:
-        """Cached tokens usable by ``req`` without touching LRU state."""
-        e = self.entries.get(req.prefix_group)
+        """Cached tokens usable by ``req`` without touching LRU state.
+        Spilled groups count: a match would restore them from the host
+        tier, which still beats recomputing the prefix."""
+        e = self.entries.get(req.prefix_group) \
+            or self.spilled.get(req.prefix_group)
         return 0 if e is None else \
             min(e.blocks, self._usable_blocks(req)) * self.block_size
 
@@ -199,12 +234,62 @@ class SimPrefixCache:
             g, e = min(victims, key=lambda ge: ge[1].last_used
                        + self.priority_bonus * (ge[1].weight - 1.0))
             freed += e.blocks
+            if self.spill:
+                # spill-on-evict: the KV moves to the host tier (the real
+                # engine's gather + D2H ride the background lane, so no
+                # charge here); device blocks free either way.
+                self.spilled[g] = _SimSpilled(e.blocks, e.last_used, e.weight)
+                self.spilled_blocks += e.blocks
             del self.entries[g]
             self._pins.pop(g, None)
         if freed and self.bm is not None:
             self.bm.discharge_cache(freed)
         self.evicted_blocks += freed
+        if self.spill:
+            self._enforce_spill_budget()
         return freed
+
+    # --- host-tier spill model (mirror of the real spill-on-evict) ------
+    def _enforce_spill_budget(self) -> None:
+        """Demote LRU hot spilled entries to the cold tier until the hot
+        span fits ``host_budget_blocks`` (None = unbounded hot tier)."""
+        if self.host_budget_blocks is None:
+            return
+        while True:
+            hot = [(g, s) for g, s in self.spilled.items() if not s.cold]
+            over = (sum(s.blocks for _, s in hot)
+                    - self.host_budget_blocks)
+            if over <= 0 or not hot:
+                return
+            _, victim = min(hot, key=lambda gs: gs[1].last_used)
+            victim.cold = True
+
+    def _restore(self, group: int, now: float) -> Optional[_SimEntry]:
+        """Reload a spilled group's blocks onto the device: free blocks are
+        claimed (reclaiming other cache entries if short), the H2D lane is
+        charged tier-aware (cold int8 groups at COLD_WIRE_RATIO width),
+        and the entry rejoins ``entries``.  Returns None — a plain miss —
+        when device space cannot be made; the spilled copy is kept."""
+        sp = self.spilled.get(group)
+        if sp is None or self.bm is None:
+            return None
+        need = sp.blocks
+        short = need - self.bm.free_blocks
+        if short > 0:
+            # reclaim only touches device-resident entries, never the
+            # spilled dict, so the restoring group is safe from it
+            self.reclaim(short)
+        if need > self.bm.free_blocks:
+            return None
+        if sp.cold:
+            self.bm.h2d.enqueue(now, need, COLD_WIRE_RATIO)
+        else:
+            self.bm.h2d.enqueue(now, need)
+        self.bm.charge_cache(need)
+        del self.spilled[group]
+        e = self.entries[group] = _SimEntry(sp.blocks, now, sp.weight)
+        self.restored_blocks += need
+        return e
 
     def shrink_to_capacity(self) -> int:
         over = self.cached_blocks - self.max_blocks

@@ -181,11 +181,21 @@ class SlideBatching:
             if t_acc >= horizon:
                 break
         t_fwd_min = min(t_acc, horizon)  # forward time if all host blocks restored
-        b_missing = sum(blocks_for(bm.state(r).host_tokens, bm.block_size)
-                        for r in prefix)
-        t_trans_max = b_missing * bm.t_block
+        b_missing, b_cold = 0, 0
+        for r in prefix:
+            s = bm.state(r)
+            nb = blocks_for(s.host_tokens, bm.block_size)
+            b_missing += nb
+            if s.cold_tokens:
+                b_cold += nb            # whole-group tiers: all-or-nothing
+        # tier-aware transfer ceiling: cold int8 blocks cross the wire at
+        # COLD_WIRE_RATIO width.  t_block_eff is passed ONLY when cold
+        # blocks exist — (b*t)/b != t in fp, so the all-hot path must use
+        # bm.t_block itself to stay bitwise-legacy.
+        t_trans_max = est.reload_time(b_missing - b_cold, b_cold, bm.t_block)
+        t_block_eff = t_trans_max / b_missing if b_cold else None
         return bm.copy_budget(t_fwd_min, t_trans_max,
-                              horizon, b_missing)
+                              horizon, b_missing, t_block_eff=t_block_eff)
 
     def _admit(self, view: SchedView, r: Request, t_left: float,
                token_cap, tokens_used: int, copy_budget: int,

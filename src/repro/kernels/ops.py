@@ -13,6 +13,8 @@ import jax
 from .block_gather import block_gather as _block_gather
 from .chunked_prefill import chunked_prefill_attention as _chunked_prefill
 from .chunked_prefill import packed_prefill_attention as _packed_prefill
+from .kv_quant import kv_block_dequantize as _kv_dequant
+from .kv_quant import kv_block_quantize as _kv_quant
 from .paged_attention import paged_decode_attention as _paged_decode
 
 
@@ -50,3 +52,15 @@ def packed_prefill_attention(q, k_cache, v_cache, ctx_lens,
 def block_gather(pool, indices, interpret: bool | None = None):
     it = _interpret_default() if interpret is None else interpret
     return _block_gather(pool, indices, interpret=it)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def kv_block_quantize(blocks, interpret: bool | None = None):
+    it = _interpret_default() if interpret is None else interpret
+    return _kv_quant(blocks, interpret=it)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def kv_block_dequantize(vals, scales, interpret: bool | None = None):
+    it = _interpret_default() if interpret is None else interpret
+    return _kv_dequant(vals, scales, interpret=it)

@@ -61,3 +61,26 @@ def chunked_prefill_attention_ref(q, k_cache, v_cache, cache_lens):
 def block_gather_ref(pool, indices):
     """pool: (P, page, ...); indices: (n,) -> (n, page, ...)."""
     return pool[indices]
+
+
+def kv_block_quantize_ref(blocks):
+    """Symmetric int8 per-(block, layer, k|v)-plane quantization.
+    blocks: (n, L, 2, bs, Hkv, hd) -> (int8 vals same shape, fp32 scales
+    (n, L, 2)).  Expression shapes deliberately mirror kv_quant.py so the
+    kernel is BITWISE equal in interpret mode."""
+    n, lyr, two = blocks.shape[:3]
+    x = blocks.reshape(n * lyr * two, -1).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x), axis=1, keepdims=True) * (1.0 / 127.0)
+    inv = jnp.where(scale > 0.0, 1.0 / scale, 0.0)
+    q = jnp.clip(jnp.round(x * inv), -127.0, 127.0).astype(jnp.int8)
+    return q.reshape(blocks.shape), scale.reshape(n, lyr, two)
+
+
+def kv_block_dequantize_ref(vals, scales):
+    """vals: (n, L, 2, bs, Hkv, hd) int8, scales: (n, L, 2) -> fp32
+    blocks.  Roundtrip error vs the original is bounded by scale/2 per
+    element (see kv_quant.py)."""
+    n, lyr, two = vals.shape[:3]
+    q = vals.reshape(n * lyr * two, -1)
+    out = q.astype(jnp.float32) * scales.reshape(n * lyr * two, 1)
+    return out.reshape(vals.shape)

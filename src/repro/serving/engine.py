@@ -104,6 +104,10 @@ class EngineStats:
     refit_failures: int = 0        # online estimator refits that failed
     decode_launches: int = 0       # jitted decode calls (one per step with
     # decode work; fused or logits path)
+    host_bytes: int = 0            # current hot host-tier bytes (<= budget)
+    spill_blocks: int = 0          # cumulative prefix-cache blocks spilled
+    # to the host tier instead of destroyed (tiered KV cache)
+    cold_blocks: int = 0           # current int8 cold-tier blocks
     host_syncs: int = 0            # device->host fetches in the hot loop —
     # the perf gate asserts exactly one per model launch (no hidden syncs)
     # bounded: long-lived replicas must not grow without limit
@@ -121,20 +125,30 @@ class Engine:
                  cache_blocks: Optional[int] = None,
                  packed_prefill: bool = True,
                  overlap_transfers: bool = True,
-                 fused_decode: bool = True):
+                 fused_decode: bool = True,
+                 host_tier_bytes: Optional[int] = None,
+                 cold_quantize: bool = True):
         self.cfg = cfg
         self.params = params
         self.eng_cfg = eng_cfg
         self.policy = policy
         self.max_ctx = max_ctx
-        self.pool = PagedKVPool(cfg, num_blocks, block_size)
+        # host_tier_bytes bounds the hot host tier (LRU demotion into the
+        # int8 cold tier, see kv_pool.KVTierStore); None = legacy
+        # unbounded host mirror with bitwise-identical token streams
+        self.pool = PagedKVPool(cfg, num_blocks, block_size,
+                                host_tier_bytes=host_tier_bytes,
+                                cold_quantize=cold_quantize)
         self.bm = BlockManager(num_blocks - 1, block_size, t_block,
                                **(bm_kwargs or {}))
         # radix prefix cache: shares prompt KV across requests (refcounted
         # blocks, CoW); holds at most ``cache_blocks`` beyond live pins and
-        # yields them back on demand (BlockManager.reclaim_cache).
+        # yields them back on demand (BlockManager.reclaim_cache).  With a
+        # bounded host tier, evictions SPILL into it instead of destroying
+        # the KV (restorable on a later match).
         self.cache: Optional[RadixPrefixCache] = (
-            RadixPrefixCache(self.pool, self.bm, max_blocks=cache_blocks)
+            RadixPrefixCache(self.pool, self.bm, max_blocks=cache_blocks,
+                             spill=host_tier_bytes is not None)
             if prefix_cache else None)
         self.est = est or BatchLatencyEstimator(
             a_p=1e-8, b_p=1e-8, c_p=1e-5, a_d=1e-8, b_d=1e-4, t_c=1e-3)
@@ -148,6 +162,9 @@ class Engine:
         self.overlap_transfers = overlap_transfers
         self.worker: Optional[TransferWorker] = (
             TransferWorker() if overlap_transfers else None)
+        if self.cache is not None:
+            # spill restores prefer buffers the worker pre-staged
+            self.cache.worker = self.worker
         # per-rid transfer epoch: bumped on evict/release so background
         # completions for a superseded residency generation are discarded
         self._epoch: dict[int, int] = {}
@@ -238,7 +255,12 @@ class Engine:
             logical = [bi for bi in range(start, start + n) if bi < len(t)]
             if not logical:
                 continue
-            gathered = self.pool.gather_blocks(rid, logical)
+            if self.pool.tier.prefer_cold(len(logical)):
+                # this mirror would land demote-bound in the cold tier:
+                # quantize on device so the D2H wire is int8 (~4x less)
+                gathered = self.pool.gather_blocks_quantized(rid, logical)
+            else:
+                gathered = self.pool.gather_blocks(rid, logical)
             self.worker.offload(rid, epoch, logical, gathered)
 
     def _drain_transfers(self) -> int:
@@ -257,6 +279,15 @@ class Engine:
                 # invalidate() (stale), after the request was released
                 # (dead), or after the reload it was staged for already ran
                 # synchronously (nothing left on host to restore)
+                if d.rid < 0:
+                    # radix-cache spill pseudo-rid: never in bm.table, so
+                    # the dead-guard must instead ask the cache whether the
+                    # spilled group still exists (restore consumes the
+                    # buffer; re-adoption/prune invalidates it)
+                    if (self.cache is None
+                            or not self.cache.has_spilled(d.rid)):
+                        self.worker.invalidate(d.rid)
+                    continue
                 s = self.bm.table.get(d.rid)
                 if dead or (s is not None and s.host_tokens == 0):
                     self.worker.invalidate(d.rid)
@@ -276,14 +307,21 @@ class Engine:
                 self.bm.note_offload_complete(d.rid, d.n_blocks)
                 self.stats.offload_blocks += d.n_blocks
                 landed += d.n_blocks
-            self.bm.observe_transfer(d.n_blocks, d.seconds)
-            self.stats.t_block_measured = self.bm.t_block
+            if not d.quantized:
+                # int8-wire copies are excluded: the copy budget scales
+                # them by COLD_WIRE_RATIO on top of the fp32 t_block,
+                # so folding their samples in would count the 4x twice
+                self.bm.observe_transfer(d.n_blocks, d.seconds)
+                self.stats.t_block_measured = self.bm.t_block
         return landed
 
     def _prefetch_reloads(self) -> None:
         """Hint the H2D staging lane: evicted requests near the head of the
         (policy-sorted) queue will likely reload next round — stage their
-        host blocks now so the copy lands before the batch that needs it."""
+        host blocks now so the copy lands before the batch that needs it.
+        Payloads go out in tier wire format: cold groups ship int8 and the
+        worker dequantizes on device.  Leftover slots stage the most
+        recently touched radix-cache spill groups."""
         if self.worker is None:
             return
         hinted = 0
@@ -294,18 +332,38 @@ class Engine:
             if s is None or s.host_tokens <= 0 or s.dev_tokens > 0:
                 continue
             nb = blocks_for(s.host_tokens, self.bm.block_size)
-            h = self.pool.host.get(r.rid, {})
-            if not all(bi in h for bi in range(nb)):
+            payloads = self.pool.tier.payloads(r.rid, range(nb))
+            if payloads is None:
                 continue
             if self.worker.prefetch(r.rid, self._epoch.get(r.rid, 0),
-                                    [h[bi] for bi in range(nb)]):
+                                    payloads):
                 hinted += 1
+        if self.cache is not None and hinted < self.worker.max_staged:
+            for host_rid, payloads in self.cache.spill_candidates(
+                    self.worker.max_staged - hinted):
+                if self.worker.prefetch(host_rid, 0, payloads):
+                    hinted += 1
 
     def _forget_transfers(self, rid: int) -> None:
         """Invalidate all in-flight transfer state for rid (evict/release)."""
         self._epoch[rid] = self._epoch.get(rid, 0) + 1
         if self.worker is not None:
             self.worker.invalidate(rid)
+
+    def _sync_tier_state(self) -> None:
+        """Mirror the tier store into the scheduling layer: mark each live
+        request's host span cold when its tier group was demoted (the
+        copy-budget control then prices its reload at the int8 wire), and
+        refresh the tier gauges on EngineStats.  With an unbounded host
+        tier nothing is ever cold and this is a no-op on the accounting."""
+        tier = self.pool.tier
+        if tier.budget_bytes is not None:
+            for rid, s in self.bm.table.items():
+                s.cold_tokens = (s.host_tokens if tier.is_cold(rid) else 0)
+        self.stats.host_bytes = tier.host_bytes
+        self.stats.cold_blocks = tier.cold_blocks
+        if self.cache is not None:
+            self.stats.spill_blocks = self.cache.stats.spilled_blocks
 
     def _sync_pool_with_bm(self, plan: BatchPlan) -> None:
         """Apply the §4.3 directives the policy issued on the accounting
@@ -338,6 +396,7 @@ class Engine:
             self.now = max(self.now, time.monotonic() - self._wall_epoch)
         offload_landed = self._drain_transfers()
         self.bm.complete_offloads(self.now)
+        self._sync_tier_state()
         view = SchedView(self.queue, self.bm, self.est, self.eng_cfg,
                          self.now)
         plan = self.policy.form_batch(view)

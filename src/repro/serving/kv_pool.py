@@ -1,9 +1,14 @@
-"""Paged KV pool: the real device-side block store + host-side mirror.
+"""Paged KV pool: the real device-side block store + tiered host mirror.
 
 Layout: one device array ``(L, 2, num_blocks, block_size, Hkv, hd)``
-(k=0 / v=1), addressed through per-request block tables.  The host pool
-holds offloaded/mirrored block contents as numpy arrays keyed per request
-— the §4.3 asynchronous-offload target.
+(k=0 / v=1), addressed through per-request block tables.  Off-device
+residency is TIERED (``KVTierStore``): a capacity-bounded HOST tier of
+fp32 numpy blocks (the §4.3 asynchronous-offload target) and an
+unbounded int8-quantized COLD tier that host-tier evictions demote into
+(per-plane scales; see ``kernels/kv_quant.py`` for the wire format and
+error bound).  Tier entries are keyed per request — radix-cache spills
+use negative pseudo-rids (``new_cache_rid``) so cache nodes and live
+requests share one LRU clock.
 
 Physical blocks are REFERENCE COUNTED so several block tables (and the
 radix prefix cache, ``serving/prefix_cache.py``) can point at the same
@@ -17,18 +22,273 @@ mechanism separate.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Iterator, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import kv_block_dequantize, kv_block_quantize
 from ..models.model import ArchConfig
+
+
+class KVTierStore:
+    """Two-tier off-device block store with one LRU clock across groups.
+
+    * HOT (host DRAM, fp32): bounded by ``budget_bytes``; ``None`` means
+      unbounded — the pre-tiering behaviour, bitwise-identical streams.
+    * COLD ("disk", int8 + per-plane fp32 scales when ``cold_quantize``,
+      else raw fp32 — the exact roundtrip mode): unbounded; host-tier
+      evictions demote into it WHOLE GROUPS at a time (a group = all
+      blocks of one rid / cache pseudo-rid), so any group lives entirely
+      in one tier and per-request reload cost is unambiguous.
+
+    Eviction is LRU by last touch (monotonic counter, deterministic):
+    puts, reads and reloads touch the group.  Demotion quantizes all of
+    a group's blocks in ONE ``kv_block_quantize`` call; promotion (a new
+    hot put for a demoted rid) dequantizes in one call likewise.
+    """
+
+    def __init__(self, block_bytes: int, budget_bytes: Optional[int] = None,
+                 cold_quantize: bool = True):
+        self.block_bytes = block_bytes
+        self.budget_bytes = budget_bytes
+        self.cold_quantize = cold_quantize
+        self.hot: dict[int, dict[int, np.ndarray]] = {}
+        # bi -> (int8 vals (L,2,bs,Hkv,hd), fp32 scales (L,2)) | fp32 array
+        self.cold: dict[int, dict[int, object]] = {}
+        self._touch: dict[int, int] = {}
+        self._clock = 0
+        self.demoted_blocks = 0     # cumulative hot -> cold demotions
+        self.cold_reload_blocks = 0  # cumulative cold blocks dequantized
+
+    # --- byte/blocks accounting ------------------------------------------
+    @property
+    def hot_blocks(self) -> int:
+        return sum(len(d) for d in self.hot.values())
+
+    @property
+    def cold_blocks(self) -> int:
+        return sum(len(d) for d in self.cold.values())
+
+    @property
+    def host_bytes(self) -> int:
+        return self.hot_blocks * self.block_bytes
+
+    def touch(self, rid: int) -> None:
+        self._clock += 1
+        self._touch[rid] = self._clock
+
+    def n_blocks(self, rid: int) -> int:
+        return len(self.hot.get(rid, ())) + len(self.cold.get(rid, ()))
+
+    def has_block(self, rid: int, bi: int) -> bool:
+        return bi in self.hot.get(rid, ()) or bi in self.cold.get(rid, ())
+
+    def block_ids(self, rid: int) -> Iterator[int]:
+        yield from self.hot.get(rid, ())
+        yield from self.cold.get(rid, ())
+
+    def is_cold(self, rid: int) -> bool:
+        return bool(self.cold.get(rid))
+
+    def cold_block_count(self, rid: int) -> int:
+        return len(self.cold.get(rid, ()))
+
+    def prefer_cold(self, n_blocks: int) -> bool:
+        """Should a fresh offload of ``n_blocks`` land directly in the
+        cold tier (int8 D2H wire)?  Yes when the hot budget cannot take it
+        without demoting — the put would be demote-bound anyway, so
+        quantizing on device saves ~4x D2H traffic."""
+        return (self.budget_bytes is not None and self.cold_quantize
+                and self.host_bytes + n_blocks * self.block_bytes
+                > self.budget_bytes)
+
+    # --- tier movement ----------------------------------------------------
+    def put(self, rid: int, blocks: dict) -> None:
+        """Land fp32 blocks in the hot tier (D2H completion / sync
+        offload), enforcing the byte budget by LRU whole-group demotion."""
+        if not blocks:
+            return
+        if rid in self.cold:
+            self._promote(rid)      # keep the whole group in one tier
+        self.hot.setdefault(rid, {}).update(blocks)
+        self.touch(rid)
+        self._enforce(last=rid)
+
+    def put_cold(self, rid: int, blocks: dict) -> None:
+        """Land quantized ``(vals, scales)`` payloads straight in the cold
+        tier (the int8 D2H wire of a demote-bound offload)."""
+        if not blocks:
+            return
+        if rid in self.hot:
+            self._demote(rid)       # group invariant: one tier per rid
+        self.cold.setdefault(rid, {}).update(blocks)
+        self.touch(rid)
+
+    def get_block(self, rid: int, bi: int) -> Optional[np.ndarray]:
+        """Fetch one block as fp32, dequantizing a cold entry on demand."""
+        h = self.hot.get(rid)
+        if h is not None and bi in h:
+            self.touch(rid)
+            return h[bi]
+        c = self.cold.get(rid)
+        if c is not None and bi in c:
+            self.touch(rid)
+            entry = c[bi]
+            if isinstance(entry, tuple):
+                self.cold_reload_blocks += 1
+                return self._thaw_batch([entry])[0]
+            return entry
+        return None
+
+    def payloads(self, rid: int, block_ids: Sequence[int]):
+        """Raw wire payloads for the H2D lane: fp32 arrays for hot blocks,
+        ``(int8 vals, scales)`` tuples for cold ones (uploaded as int8 and
+        dequantized ON DEVICE by the transfer worker).  None if any block
+        is absent."""
+        out = []
+        for bi in block_ids:
+            h = self.hot.get(rid)
+            if h is not None and bi in h:
+                out.append(h[bi])
+                continue
+            c = self.cold.get(rid)
+            if c is None or bi not in c:
+                return None
+            out.append(c[bi])
+        if out:
+            self.touch(rid)
+        return out
+
+    def drop(self, rid: int) -> None:
+        self.hot.pop(rid, None)
+        self.cold.pop(rid, None)
+        self._touch.pop(rid, None)
+
+    def split_group(self, rid: int, at: int, new_rid: int) -> None:
+        """Radix-node split of a spilled group: blocks [at, n) move to
+        ``new_rid`` re-keyed from 0 (mirroring ``_Node`` splits in the
+        prefix cache, whose spilled halves must stay independently
+        reloadable)."""
+        moved = False
+        for store in (self.hot, self.cold):
+            g = store.get(rid)
+            if not g:
+                continue
+            lower = {bi - at: v for bi, v in g.items() if bi >= at}
+            if lower:
+                store[rid] = {bi: v for bi, v in g.items() if bi < at}
+                store.setdefault(new_rid, {}).update(lower)
+                moved = True
+        if moved:
+            self._touch[new_rid] = self._touch.get(rid, 0)
+
+    # --- internals --------------------------------------------------------
+    def _thaw_batch(self, entries: list) -> np.ndarray:
+        vals = jnp.asarray(np.stack([e[0] for e in entries]))
+        scales = jnp.asarray(np.stack([e[1] for e in entries]))
+        return np.asarray(kv_block_dequantize(vals, scales))
+
+    def _promote(self, rid: int) -> None:
+        entries = self.cold.pop(rid, {})
+        if not entries:
+            return
+        keys = sorted(entries)
+        quant = [k for k in keys if isinstance(entries[k], tuple)]
+        h = self.hot.setdefault(rid, {})
+        if quant:
+            deq = self._thaw_batch([entries[k] for k in quant])
+            self.cold_reload_blocks += len(quant)
+            for i, k in enumerate(quant):
+                h[k] = deq[i]
+        for k in keys:
+            if not isinstance(entries[k], tuple):
+                h[k] = entries[k]
+
+    def _demote(self, rid: int) -> None:
+        entries = self.hot.pop(rid, {})
+        if not entries:
+            return
+        keys = sorted(entries)
+        c = self.cold.setdefault(rid, {})
+        if self.cold_quantize:
+            stacked = jnp.asarray(np.stack([entries[k] for k in keys]))
+            vals, scales = kv_block_quantize(stacked)
+            vals, scales = np.asarray(vals), np.asarray(scales)
+            for i, k in enumerate(keys):
+                c[k] = (vals[i], scales[i])
+        else:
+            for k in keys:
+                c[k] = entries[k]
+        self.demoted_blocks += len(keys)
+
+    def _enforce(self, last: Optional[int] = None) -> None:
+        if self.budget_bytes is None:
+            return
+        while self.host_bytes > self.budget_bytes and self.hot:
+            others = [r for r in self.hot if r != last]
+            victim = (min(others, key=lambda r: self._touch.get(r, 0))
+                      if others else last)
+            self._demote(victim)
+
+
+class _RidBlocks:
+    """Mapping view of one rid's tier entries as fp32 blocks (dict-like
+    back-compat for the old ``pool.host[rid]`` dict; cold entries are
+    dequantized on item access)."""
+
+    def __init__(self, tier: KVTierStore, rid: int):
+        self._tier = tier
+        self._rid = rid
+
+    def __contains__(self, bi) -> bool:
+        return self._tier.has_block(self._rid, bi)
+
+    def __iter__(self):
+        return self._tier.block_ids(self._rid)
+
+    def __len__(self) -> int:
+        return self._tier.n_blocks(self._rid)
+
+    def __getitem__(self, bi) -> np.ndarray:
+        got = self._tier.get_block(self._rid, bi)
+        if got is None:
+            raise KeyError(bi)
+        return got
+
+    def get(self, bi, default=None):
+        got = self._tier.get_block(self._rid, bi)
+        return default if got is None else got
+
+    def keys(self):
+        return list(self._tier.block_ids(self._rid))
+
+
+class _HostView:
+    """Back-compat ``pool.host`` facade over the tier store."""
+
+    def __init__(self, tier: KVTierStore):
+        self._tier = tier
+
+    def __contains__(self, rid) -> bool:
+        return self._tier.n_blocks(rid) > 0
+
+    def __getitem__(self, rid) -> _RidBlocks:
+        if self._tier.n_blocks(rid) == 0:
+            raise KeyError(rid)
+        return _RidBlocks(self._tier, rid)
+
+    def get(self, rid, default=None):
+        if self._tier.n_blocks(rid) == 0:
+            return default
+        return _RidBlocks(self._tier, rid)
 
 
 class PagedKVPool:
     def __init__(self, cfg: ArchConfig, num_blocks: int, block_size: int,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, host_tier_bytes: Optional[int] = None,
+                 cold_quantize: bool = True):
         self.cfg = cfg
         self.num_blocks = num_blocks
         self.block_size = block_size
@@ -40,8 +300,23 @@ class PagedKVPool:
         self.refcount: list[int] = [0] * num_blocks
         self.refcount[0] = 1                      # null page never freed
         self.tables: dict[int, list[int]] = {}
-        # host mirror, keyed rid -> {logical block index -> contents}
-        self.host: dict[int, dict[int, np.ndarray]] = {}
+        # tiered host mirror, keyed rid -> {logical block index -> contents}
+        # (host_tier_bytes=None keeps the legacy unbounded fp32 behaviour)
+        block_bytes = int(cfg.n_layers * 2 * block_size * cfg.n_kv_heads
+                          * cfg.hd * np.dtype(dtype).itemsize)
+        self.tier = KVTierStore(block_bytes, host_tier_bytes, cold_quantize)
+        self._cache_rid = -1        # next radix-cache spill pseudo-rid
+
+    @property
+    def host(self) -> _HostView:
+        """Dict-like view of off-device residency (both tiers, as fp32)."""
+        return _HostView(self.tier)
+
+    def new_cache_rid(self) -> int:
+        """Fresh negative pseudo-rid for a radix-cache spill group (never
+        collides with real request ids, shares the tier's LRU clock)."""
+        rid, self._cache_rid = self._cache_rid, self._cache_rid - 1
+        return rid
 
     # --- allocation ------------------------------------------------------
     def alloc(self, rid: int, n: int) -> bool:
@@ -62,7 +337,7 @@ class PagedKVPool:
     def release(self, rid: int) -> None:
         for b in self.tables.pop(rid, []):
             self.decref(b)
-        self.host.pop(rid, None)
+        self.tier.drop(rid)
 
     def table_array(self, rids: list[int], maxp: Optional[int] = None,
                     rows: Optional[int] = None):
@@ -133,6 +408,13 @@ class PagedKVPool:
         phys = jnp.asarray([t[bi] for bi in block_indices], jnp.int32)
         return jnp.moveaxis(self.kv[:, :, phys], 2, 0)
 
+    def gather_blocks_quantized(self, rid: int, block_indices: list[int]):
+        """Device-side snapshot of rid's logical blocks QUANTIZED on
+        device (Pallas kernel fused after the gather): returns the
+        ``(int8 vals, fp32 scales)`` device pair — the ~4x-cheaper D2H
+        wire for offloads that will land demote-bound in the cold tier."""
+        return kv_block_quantize(self.gather_blocks(rid, block_indices))
+
     def offload_blocks(self, rid: int, block_indices: list[int]) -> None:
         """Copy listed LOGICAL blocks of rid to host in ONE device fetch
         (synchronous fallback path of the D2H lane)."""
@@ -140,13 +422,20 @@ class PagedKVPool:
             return
         data = np.asarray(jax.device_get(
             self.gather_blocks(rid, block_indices)))
-        h = self.host.setdefault(rid, {})
-        for i, bi in enumerate(block_indices):
-            h[bi] = data[i]
+        self.tier.put(rid, {bi: data[i]
+                            for i, bi in enumerate(block_indices)})
 
     def host_store(self, rid: int, blocks: dict) -> None:
-        """Land completed async D2H transfers in the host mirror."""
-        self.host.setdefault(rid, {}).update(blocks)
+        """Land completed async D2H transfers in the host tiers: fp32
+        arrays go hot, quantized ``(vals, scales)`` tuples (the int8 D2H
+        wire) go straight cold."""
+        quant = {bi: v for bi, v in blocks.items() if isinstance(v, tuple)}
+        raw = {bi: v for bi, v in blocks.items()
+               if not isinstance(v, tuple)}
+        if raw:
+            self.tier.put(rid, raw)
+        if quant:
+            self.tier.put_cold(rid, quant)
 
     def drop_device_blocks(self, rid: int) -> None:
         """Drop rid's device references (eviction); shared physical blocks
@@ -160,12 +449,12 @@ class PagedKVPool:
         Returns tokens restored.  All restores land in ONE batched scatter
         (pipelined layer-wise on TPU; on CPU the copy is synchronous but
         accounted by the BlockManager lanes)."""
-        h = self.host.get(rid, {})
         restorable = []
         for bi in range(n_blocks):
-            if bi not in h or not self.alloc(rid, 1):
+            blk = self.tier.get_block(rid, bi)
+            if blk is None or not self.alloc(rid, 1):
                 break
-            restorable.append((self.tables[rid][-1], h[bi]))
+            restorable.append((self.tables[rid][-1], blk))
         if not restorable:
             return 0
         dst = jnp.asarray([b for b, _ in restorable], jnp.int32)
@@ -194,4 +483,71 @@ class PagedKVPool:
         return len(dst) * self.block_size
 
     def host_blocks(self, rid: int) -> int:
-        return len(self.host.get(rid, ()))
+        return self.tier.n_blocks(rid)
+
+    # --- radix-cache spill groups (physical blocks, no table) -------------
+    def spill_cache_blocks(self, host_rid: int, phys: list[int]) -> None:
+        """Spill cache-owned physical blocks to the tier under a pseudo-rid
+        (keyed 0..n-1 in spill order).  One device gather; when the put
+        would land demote-bound anyway, the gather is QUANTIZED on device
+        (Pallas kernel) so the D2H wire is int8."""
+        idx = jnp.asarray(phys, jnp.int32)
+        g = jnp.moveaxis(self.kv[:, :, idx], 2, 0)
+        if self.tier.prefer_cold(len(phys)):
+            vals, scales = jax.device_get(kv_block_quantize(g))
+            vals, scales = np.asarray(vals), np.asarray(scales)
+            self.tier.put_cold(host_rid, {i: (vals[i], scales[i])
+                                          for i in range(len(phys))})
+        else:
+            data = np.asarray(jax.device_get(g))
+            self.tier.put(host_rid, {i: data[i]
+                                     for i in range(len(phys))})
+
+    def _alloc_free_blocks(self, n: int) -> list[int]:
+        if len(self.free) < n:
+            return []
+        phys = []
+        for _ in range(n):
+            b = self.free.pop()
+            self.refcount[b] = 1
+            phys.append(b)
+        return phys
+
+    def restore_cache_group(self, host_rid: int, n: int) -> list[int]:
+        """Reload a spilled cache group to fresh device blocks in ONE
+        batched scatter; cold (int8) payloads travel the narrow wire and
+        are dequantized ON DEVICE.  Returns the new physical block ids
+        ([] if blocks are missing or the device pool is full)."""
+        entries = self.tier.payloads(host_rid, list(range(n)))
+        if entries is None:
+            return []
+        phys = self._alloc_free_blocks(n)
+        if not phys:
+            return []
+        if all(isinstance(e, tuple) for e in entries):
+            vals = jnp.asarray(np.stack([e[0] for e in entries]))
+            scales = jnp.asarray(np.stack([e[1] for e in entries]))
+            data = kv_block_dequantize(vals, scales)
+            self.tier.cold_reload_blocks += n
+        else:
+            data = jnp.asarray(np.stack(
+                [e if not isinstance(e, tuple) else
+                 self.tier._thaw_batch([e])[0] for e in entries]))
+        self.kv = self.kv.at[:, :, jnp.asarray(phys, jnp.int32)].set(
+            jnp.moveaxis(data, 0, 2))
+        self.tier.drop(host_rid)
+        return phys
+
+    def adopt_staged_group(self, host_rid: int, staged, n: int) -> list[int]:
+        """Like ``restore_cache_group`` but the H2D copy already landed:
+        ``staged`` is the (m, L, 2, bs, Hkv, hd) device buffer the transfer
+        worker pre-staged for this group."""
+        if staged.shape[0] < n:
+            return []
+        phys = self._alloc_free_blocks(n)
+        if not phys:
+            return []
+        self.kv = self.kv.at[:, :, jnp.asarray(phys, jnp.int32)].set(
+            jnp.moveaxis(staged[:n], 0, 2))
+        self.tier.drop(host_rid)
+        return phys

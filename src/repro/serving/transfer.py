@@ -19,6 +19,13 @@ transfers and drains completions.
   reload lands before the batch that needs it.  At most ``max_staged``
   requests are staged at a time (classic double buffering).
 
+Both lanes speak the TIERED wire format: a D2H job whose snapshot was
+quantized on device carries an ``(int8 vals, fp32 scales)`` pair and
+lands as per-block tuples (the pool routes them into the cold tier);
+an H2D job whose host payloads are such tuples uploads the int8 data
+(~4x fewer wire bytes) and dequantizes ON DEVICE (Pallas kernel) so the
+staged buffer the engine consumes is always fp32.
+
 Every job carries the request's transfer *epoch*; the engine bumps the
 epoch on eviction/release so completions for a superseded residency
 generation are discarded instead of corrupting the accounting.
@@ -40,6 +47,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import kv_block_dequantize
+
 logger = logging.getLogger(__name__)
 
 
@@ -53,6 +62,8 @@ class TransferDone:
     seconds: float               # measured wall time of the copy
     blocks: Optional[dict] = None   # d2h only: {logical index -> ndarray}
     ok: bool = True              # False: the copy raised; nothing landed
+    quantized: bool = False      # int8 wire: excluded from the t_block
+    # EWMA (the copy budget already scales cold copies by COLD_WIRE_RATIO)
 
 
 class TransferWorker:
@@ -180,19 +191,44 @@ class TransferWorker:
         t0 = time.monotonic()
         if kind == "d2h":
             logical, gathered = job[3], job[4]
-            data = np.asarray(jax.device_get(gathered))
-            dt = time.monotonic() - t0
-            blocks = {bi: data[i] for i, bi in enumerate(logical)}
+            if isinstance(gathered, tuple):
+                # quantized-on-device snapshot: the wire carries int8 vals
+                # + per-plane scales (~4x fewer bytes than fp32)
+                vals, scales = jax.device_get(gathered)
+                vals, scales = np.asarray(vals), np.asarray(scales)
+                dt = time.monotonic() - t0
+                blocks = {bi: (vals[i], scales[i])
+                          for i, bi in enumerate(logical)}
+                quant = True
+            else:
+                data = np.asarray(jax.device_get(gathered))
+                dt = time.monotonic() - t0
+                blocks = {bi: data[i] for i, bi in enumerate(logical)}
+                quant = False
             done = TransferDone("d2h", rid, epoch, len(logical), dt,
-                                blocks=blocks)
+                                blocks=blocks, quantized=quant)
             with self._lock:
                 self._done.append(done)
         else:
             host_blocks = job[3]
-            arr = jnp.asarray(np.stack(host_blocks))
+            quant = any(isinstance(b, tuple) for b in host_blocks)
+            if all(isinstance(b, tuple) for b in host_blocks):
+                # cold-tier group: upload int8 + scales, dequantize on
+                # device so the staged buffer is fp32 like any other
+                vals = jnp.asarray(np.stack([b[0] for b in host_blocks]))
+                scales = jnp.asarray(np.stack([b[1] for b in host_blocks]))
+                arr = kv_block_dequantize(vals, scales)
+            else:
+                # whole-group tiering never mixes; thaw stray tuples
+                # defensively so a mixed hint still stages correctly
+                arr = jnp.asarray(np.stack(
+                    [np.asarray(kv_block_dequantize(
+                        jnp.asarray(b[0])[None], jnp.asarray(b[1])[None]))[0]
+                     if isinstance(b, tuple) else b for b in host_blocks]))
             arr.block_until_ready()
             dt = time.monotonic() - t0
-            done = TransferDone("h2d", rid, epoch, len(host_blocks), dt)
+            done = TransferDone("h2d", rid, epoch, len(host_blocks), dt,
+                                quantized=quant)
             with self._lock:
                 self._inflight.discard(rid)
                 self._staged[rid] = (epoch, len(host_blocks), arr)

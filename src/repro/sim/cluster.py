@@ -46,6 +46,13 @@ class ClusterConfig:
     # behave identically with this on or off.
     prefix_cache: bool = True
     cache_frac: float = 0.25         # cap: fraction of device blocks
+    # tiered KV (sim mirror of serving/kv_pool.KVTierStore): a host-tier
+    # budget in blocks.  Evicted request KV beyond it demotes to the int8
+    # cold tier (BlockManager.host_budget_blocks), and the prefix cache
+    # spills evicted entries into the same-size host tier instead of
+    # destroying them (SimPrefixCache spill model).  None = legacy
+    # unbounded host mirrors + destroy-on-evict cache.
+    host_tier_blocks: Optional[int] = None
 
 
 class ClusterSim:
@@ -79,9 +86,12 @@ class ClusterSim:
     def _new_instance(self, prefill: bool) -> int:
         iid = next(self._iid)
         from ..core.blocks import BlockManager
+        bmk = dict(self.bm_kwargs)
+        if self.ccfg.host_tier_blocks is not None:
+            bmk.setdefault("host_budget_blocks", self.ccfg.host_tier_blocks)
         bm = BlockManager(self.executor.num_blocks, self.executor.block_size,
                           self.executor.t_block, beta=self.eng_cfg.beta,
-                          **self.bm_kwargs)
+                          **bmk)
         if prefill:
             cfg = self.eng_cfg
             if self.ccfg.pd_mode == "disagg":
@@ -93,7 +103,9 @@ class ClusterSim:
                 cache = SimPrefixCache(
                     self.executor.block_size,
                     max(1, int(self.executor.num_blocks
-                               * self.ccfg.cache_frac)))
+                               * self.ccfg.cache_frac)),
+                    spill=self.ccfg.host_tier_blocks is not None,
+                    host_budget_blocks=self.ccfg.host_tier_blocks)
             eng = EngineSim(iid, self.make_policy_fn(), self.executor,
                             self.est, cfg, bm, prefix_cache=cache)
             self.engines[iid] = eng

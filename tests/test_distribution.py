@@ -16,11 +16,16 @@ from repro.launch.hlo_cost import analyze, xla_cost_analysis
 
 def run_sub(code: str) -> str:
     """Run code in a subprocess with 8 fake XLA host devices."""
+    import os
+    # Force the CPU backend in the hermetic env: without JAX_PLATFORMS,
+    # a jax install that bundles libtpu probes TPU metadata endpoints
+    # (minutes of retries on non-TPU hosts) before falling back.
     out = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(code)],
         capture_output=True, text=True, timeout=600,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
              "HOME": "/root",
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
              "XLA_FLAGS": "--xla_force_host_platform_device_count=8"})
     assert out.returncode == 0, out.stderr[-3000:]
     return out.stdout

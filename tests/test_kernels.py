@@ -6,9 +6,12 @@ import numpy as np
 import pytest
 
 from repro.kernels import (block_gather, chunked_prefill_attention,
+                           kv_block_dequantize, kv_block_quantize,
                            paged_decode_attention)
 from repro.kernels.ref import (block_gather_ref,
                                chunked_prefill_attention_ref,
+                               kv_block_dequantize_ref,
+                               kv_block_quantize_ref,
                                paged_decode_attention_ref)
 
 KEY = jax.random.PRNGKey(7)
@@ -95,6 +98,44 @@ def test_block_gather(dtype):
     out = block_gather(pool, idx)
     np.testing.assert_array_equal(np.asarray(out),
                                   np.asarray(block_gather_ref(pool, idx)))
+
+
+@pytest.mark.parametrize("n,layers,bs,hkv,hd,amp", [
+    (3, 2, 8, 2, 16, 3.0),
+    (1, 4, 16, 2, 64, 0.02),    # tiny magnitudes
+    (7, 2, 4, 1, 8, 50.0),      # large magnitudes
+])
+def test_kv_quant_bitwise_vs_ref(n, layers, bs, hkv, hd, amp):
+    """Quantize AND dequantize kernels are bitwise-equal to the oracles
+    (elementwise ops + exact reductions only)."""
+    x = jax.random.normal(KEY, (n, layers, 2, bs, hkv, hd)) * amp
+    x = x.at[0, 0].set(jnp.zeros_like(x[0, 0]))   # all-zero plane: scale 0
+    vals, scales = kv_block_quantize(x)
+    vr, sr = kv_block_quantize_ref(x)
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(vr))
+    np.testing.assert_array_equal(np.asarray(scales), np.asarray(sr))
+    assert vals.dtype == jnp.int8 and scales.shape == (n, layers, 2)
+    deq = kv_block_dequantize(vals, scales)
+    np.testing.assert_array_equal(np.asarray(deq),
+                                  np.asarray(kv_block_dequantize_ref(vr,
+                                                                     sr)))
+
+
+def test_kv_quant_roundtrip_error_bound():
+    """The documented int8 bound: per element |x - deq(quant(x))| <=
+    scale/2 of its (block, layer, k|v) plane, zero planes exact."""
+    x = jax.random.normal(KEY, (4, 3, 2, 8, 2, 16)) * 7.0
+    x = x.at[1].set(jnp.zeros_like(x[1]))
+    vals, scales = kv_block_quantize(x)
+    deq = np.asarray(kv_block_dequantize(vals, scales))
+    err = np.abs(deq - np.asarray(x))
+    bound = np.asarray(scales)[..., None, None, None] / 2.0
+    assert (err <= bound).all()
+    np.testing.assert_array_equal(deq[1], np.zeros_like(deq[1]))
+    # extrema survive the roundtrip at full scale: absmax maps to +-127
+    flat = np.abs(np.asarray(x)).reshape(4 * 3 * 2, -1)
+    amax_q = np.abs(np.asarray(vals)).reshape(4 * 3 * 2, -1).max(axis=1)
+    assert (amax_q[flat.max(axis=1) > 0] == 127).all()
 
 
 def test_kernel_consistency_with_model_decode():

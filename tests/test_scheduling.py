@@ -160,3 +160,73 @@ def test_vllm_overlong_prompt_runs_alone():
     plan = pol.form_batch(v)
     assert len(plan.entries) == 1 and plan.entries[0].req is big
     assert plan.entries[0].n_tokens == 10000
+
+
+# --------------------------------------------------------------------------
+# columnar fast path (>= _MIN_COLS rows) is bitwise-identical to scalar
+# --------------------------------------------------------------------------
+
+def _mixed_world(now=12.0, n=48, blocks=4096):
+    """Deterministic queue mixing fresh prefills, active decodes and
+    evicted (host-resident) requests across priorities/SLOs/clients."""
+    import random
+
+    from repro.core.blocks import blocks_for
+    rng = random.Random(7)
+    bm = BlockManager(blocks, 16, 1e-4)
+    reqs = []
+    for i in range(n):
+        prio = rng.choice([1, 2, 3])
+        r = Request(prompt_len=rng.randrange(64, 2048), output_len=64,
+                    arrival=rng.uniform(0.0, 10.0),
+                    slo=SLO(rng.choice([0.5, 1.0, 2.0]),
+                            rng.choice([0.05, 0.1])),
+                    priority=prio, weight={1: 2.0, 2: 1.0, 3: 0.5}[prio],
+                    client=rng.randrange(4))
+        s = bm.state(r)
+        kind = rng.random()
+        if kind < 0.4:       # active decode: context fully resident
+            for k in range(rng.randrange(1, 8)):
+                r.out_times.append(now - 1.0 + 0.01 * k)
+            s.dev_tokens = r.prompt_len + max(0, r.generated - 1)
+            bm.used_blocks += blocks_for(s.dev_tokens, 16)
+        elif kind < 0.6:     # evicted mid-decode: host-resident span
+            for k in range(rng.randrange(1, 4)):
+                r.out_times.append(now - 1.0 + 0.01 * k)
+            s.host_tokens = r.prompt_len
+        reqs.append(r)
+    return reqs, bm
+
+
+def _plan_snapshot(reqs, v, plan):
+    pos = {r.rid: i for i, r in enumerate(reqs)}
+    return {
+        "entries": [(pos[e.req.rid], e.n_tokens, e.l_kv, e.is_prefill)
+                    for e in plan.entries],
+        "evictions": [pos[r.rid] for r in plan.evictions],
+        "est_time": plan.est_time,
+        "copy_blocks": plan.copy_blocks,
+        "used": v.bm.used_blocks,
+        "residency": [(v.bm.state(r).dev_tokens, v.bm.state(r).host_tokens)
+                      for r in reqs],
+        "h2d": v.bm.h2d.busy_until,
+    }
+
+
+@pytest.mark.parametrize("name", ["vllm_fcfs", "sarathi_fcfs",
+                                  "sarathi_priority", "fair_batching",
+                                  "weighted_vtc", "edf", "sjf",
+                                  "priority_first"])
+def test_columnar_baseline_bitwise_equivalent(name, monkeypatch):
+    from repro.core import schedulers as S
+
+    def run(min_cols):
+        monkeypatch.setattr(S, "_MIN_COLS", min_cols)
+        reqs, bm = _mixed_world()
+        v = SchedView(list(reqs), bm, EST, EngineConfig(), 12.0)
+        plan = make_policy(name).form_batch(v)
+        return _plan_snapshot(reqs, v, plan)
+
+    scalar = run(10 ** 9)     # force the reference loops
+    fast = run(4)             # force the columnar path
+    assert fast == scalar     # exact: ints and bitwise-equal floats

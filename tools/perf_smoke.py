@@ -134,6 +134,64 @@ def measure_fused(cfg, params, args):
     return rows, streams[False] == streams[True]
 
 
+def measure_tier(cfg, params, args):
+    """Tiered-KV invariants in exact mode (fp32 cold tier, no quantize):
+    a preemption-heavy trace replayed with the legacy unbounded host
+    mirror and with a 2-block byte-bounded host tier must emit identical
+    token streams, and the bounded run must (a) keep the host tier within
+    its byte budget with ``EngineStats.host_bytes`` agreeing with the
+    pool's own accounting, and (b) actually push mirror/spill traffic
+    through the tier (spills + LRU demotions to the cold dict)."""
+    rows = {}
+    streams = {}
+    budget = None
+    for label, bounded in (("unbounded", False), ("bounded", True)):
+        eng = Engine(cfg, params, EngineConfig(eta=1.0, w_p=4.0, tau=1e9),
+                     make_policy("slidebatching"), num_blocks=10,
+                     block_size=16, max_ctx=256,
+                     host_tier_bytes=budget if bounded else None,
+                     cold_quantize=False)
+        if budget is None:
+            budget = 2 * eng.pool.tier.block_bytes
+            if bounded:          # first engine must already be bounded
+                raise AssertionError("probe ordering bug")
+        trace = make_trace(cfg, 4, 40, 6, args.seed)
+        for req, prompt in trace:
+            eng.add_request(req, prompt)
+        eng.run_until_drained(max_iters=400)
+        s, t = eng.stats, eng.pool.tier
+        rows[label] = {
+            "host_tier_bytes": budget if bounded else None,
+            "evictions": s.evictions,
+            "spill_blocks": s.spill_blocks,
+            "cold_blocks": s.cold_blocks,
+            "host_bytes": s.host_bytes,
+            "tier_host_bytes": t.host_bytes,
+            "demoted_blocks": t.demoted_blocks,
+            "cold_reload_blocks": t.cold_reload_blocks,
+        }
+        streams[label] = {i: eng.outputs[req.rid]
+                          for i, (req, _) in enumerate(trace)}
+        eng.kill()
+    b = rows["bounded"]
+    failures = []
+    if streams["unbounded"] != streams["bounded"]:
+        failures.append("token streams diverged between unbounded host "
+                        "mirror and byte-bounded tier (exact mode)")
+    if b["host_bytes"] != b["tier_host_bytes"]:
+        failures.append("EngineStats.host_bytes %d != tier accounting %d"
+                        % (b["host_bytes"], b["tier_host_bytes"]))
+    if b["host_bytes"] > budget:
+        failures.append("host tier %d bytes exceeds its %d-byte budget"
+                        % (b["host_bytes"], budget))
+    if not (b["spill_blocks"] > 0 and b["demoted_blocks"] > 0):
+        failures.append("bounded run saw no tier traffic (spills=%d, "
+                        "demotions=%d) — not a preemption regime"
+                        % (b["spill_blocks"], b["demoted_blocks"]))
+    rows["streams_identical"] = streams["unbounded"] == streams["bounded"]
+    return rows, failures
+
+
 def collect(args) -> tuple[dict, list[str]]:
     """Run every measurement; return (bench payload, failure messages)."""
     cfg = get_smoke("qwen1_5_0_5b")
@@ -146,6 +204,7 @@ def collect(args) -> tuple[dict, list[str]]:
     (base_d, fast_d), same_d = measure_overlap(cfg, params, args,
                                                args.decode_len)
     (logits_row, fused_row), same_f = measure_fused(cfg, params, args)
+    tier_rows, tier_failures = measure_tier(cfg, params, args)
 
     speedup = fast_p["prefill_tok_per_s"] / max(base_p["prefill_tok_per_s"],
                                                 1e-9)
@@ -154,7 +213,7 @@ def collect(args) -> tuple[dict, list[str]]:
     fused_ratio = fused_row["tpot_proxy_ms"] / max(
         logits_row["tpot_proxy_ms"], 1e-9)
 
-    failures = []
+    failures = list(tier_failures)
     if not (same_p and same_d):
         failures.append("token streams diverged between baseline and "
                         "overlapped engines")
@@ -189,7 +248,9 @@ def collect(args) -> tuple[dict, list[str]]:
         "decode_fusion": {"logits": logits_row, "fused": fused_row,
                           "fused_tpot_ratio": round(fused_ratio, 2),
                           "streams_identical": same_f},
-        "streams_identical": same_p and same_d and same_f,
+        "kv_tier": tier_rows,
+        "streams_identical": (same_p and same_d and same_f
+                              and tier_rows["streams_identical"]),
         "gates": {"min_prefill_speedup": args.min_speedup,
                   "max_tpot_ratio": args.max_tpot_ratio,
                   "max_fused_ratio": args.max_fused_ratio,
