@@ -63,6 +63,15 @@ TIERED_PRESET = {
     "n_groups": 8, "prefix_len": 1024, "p_shared": 0.9,
 }
 
+# coloc-vs-disagg smoke (run_disagg_preset): the same sharegpt trace
+# through a 5-replica coloc fleet and a 3 prefill + 2 decode disagg
+# fleet — the CI gate is on the handoff-accounting invariants, the
+# TTFT/TPOT rows are trajectory data.
+DISAGG_PRESET = {
+    "rate": 40.0, "duration": 6.0, "seed": 7,
+    "n_prefill": 3, "n_decode": 2,
+}
+
 
 def replay_router_sweep(fast: bool = True) -> list[dict]:
     ex, est, _ = get_exec()
@@ -308,6 +317,82 @@ def run_tiered_preset() -> dict:
     return row
 
 
+def run_disagg_preset() -> dict:
+    """Disaggregated prefill/decode vs coloc on the identical trace: one
+    flat row keyed ``disagg`` in BENCH_replay_scale.json with both modes'
+    TTFT/TPOT plus the handoff/reservation counters (priced at the
+    analytical executor's physical per-block KV bytes, the same constant
+    the live pool uses — see tools/perf_smoke.py's parity gate).  The
+    pass/fail gates are the invariant booleans, recomputed every run."""
+    ex, est, _ = get_exec()
+    p = DISAGG_PRESET
+    block_bytes = int(ex.model.kv_bytes_per_token * ex.block_size)
+    row = {"name": "replay_scale", "preset": "disagg", **p,
+           "block_bytes": block_bytes}
+    counters = {}
+    for mode in ("coloc", "disagg"):
+        reqs = WORKLOADS["sharegpt"](rate=p["rate"],
+                                     duration=p["duration"],
+                                     seed=p["seed"])
+        row.setdefault("n_requests", len(reqs))
+        ccfg = (ClusterConfig(pd_mode="coloc",
+                              n_prefill=p["n_prefill"] + p["n_decode"])
+                if mode == "coloc" else
+                ClusterConfig(pd_mode="disagg", n_prefill=p["n_prefill"],
+                              n_decode=p["n_decode"],
+                              handoff_block_bytes=block_bytes))
+        cs = ClusterSim(lambda: make_policy("slidebatching"),
+                        GoRouting(est, RouterConfig(pd_mode=mode)),
+                        ex, est, EngineConfig(w_p=4.0), ccfg)
+        rep = replay_sim(cs, reqs, w_p=4.0)
+        r = rep.row()
+        for k in ("ttft_p50", "ttft_p99", "tpot_p50", "tpot_p99", "slo",
+                  "tdg_ratio"):
+            row[f"{k}_{mode}"] = r[k]
+        if mode == "disagg":
+            from repro.sim import disagg_counters
+            counters = disagg_counters(cs)
+            row["dropped_disagg"] = len(cs.dropped)
+            for k, v in counters.items():
+                row[f"disagg_{k}"] = float(v) if k == "handoff_bytes" \
+                    else v
+    row["reservations_settled"] = (
+        counters["reservation_hits"] + counters["reservation_misses"]
+        == counters["handoffs"])
+    row["reserved_matches_adopted"] = (
+        counters["reserved_blocks_total"]
+        == counters["adopted_blocks_total"])
+    row["handoff_bytes_consistent"] = (
+        counters["handoff_bytes"]
+        == counters["handoff_blocks"] * block_bytes)
+    return row
+
+
+def disagg_gate_failures(row: dict) -> list[str]:
+    out = []
+    if not row["disagg_handoffs"] > 0:
+        out.append("disagg replay performed no handoffs — the trace "
+                   "never exercised the prefill->decode path")
+    if row["dropped_disagg"]:
+        out.append("disagg replay dropped %d requests" %
+                   row["dropped_disagg"])
+    if not row["reservations_settled"]:
+        out.append("disagg reservations did not all settle: %d hits + %d "
+                   "misses != %d handoffs"
+                   % (row["disagg_reservation_hits"],
+                      row["disagg_reservation_misses"],
+                      row["disagg_handoffs"]))
+    if not row["reserved_matches_adopted"]:
+        out.append("disagg reserved blocks %d != adopted blocks %d"
+                   % (row["disagg_reserved_blocks_total"],
+                      row["disagg_adopted_blocks_total"]))
+    if not row["handoff_bytes_consistent"]:
+        out.append("disagg handoff bytes %.0f != blocks %d x %d bytes"
+                   % (row["disagg_handoff_bytes"],
+                      row["disagg_handoff_blocks"], row["block_bytes"]))
+    return out
+
+
 def tiered_gate_failures(row: dict) -> list[str]:
     out = []
     if not row["tiered_beats_hbm_ttft"]:
@@ -349,7 +434,10 @@ def scale_equivalence_row(n: int = 2000) -> dict:
 def replay_scale(fast: bool = True) -> list[dict]:
     tiered = run_tiered_preset()
     assert not tiered_gate_failures(tiered), tiered_gate_failures(tiered)
-    rows = [scale_equivalence_row(), run_scale_preset("ci"), tiered]
+    disagg = run_disagg_preset()
+    assert not disagg_gate_failures(disagg), disagg_gate_failures(disagg)
+    rows = [scale_equivalence_row(), run_scale_preset("ci"), tiered,
+            disagg]
     if not fast:
         rows.append(run_scale_preset("full"))
     write_scale_bench(rows)
@@ -440,6 +528,10 @@ def main(argv=None) -> int:
     ap.add_argument("--tiered", action="store_true",
                     help="also run the tiered-KV thrash replay and gate "
                          "tiered > HBM-only on TTFT p50 + prefill tokens")
+    ap.add_argument("--disagg", action="store_true",
+                    help="also run the coloc-vs-disagg smoke and gate "
+                         "the handoff-accounting invariants (reserved == "
+                         "adopted, every reservation settled)")
     args = ap.parse_args(argv)
 
     failures = []
@@ -452,6 +544,12 @@ def main(argv=None) -> int:
         failures += tiered_gate_failures(trow)
         if args.check:
             failures += check_scale_row(trow, args.check)
+    if args.disagg:
+        drow = run_disagg_preset()
+        print(json.dumps(drow, indent=1))
+        failures += disagg_gate_failures(drow)
+        if args.check:
+            failures += check_scale_row(drow, args.check)
     row = run_scale_preset(args.preset)
     print(json.dumps(row, indent=1))
     if args.budget is not None and row["wall_s"] > args.budget:

@@ -44,6 +44,22 @@ class InstanceState:
     ts: float = 0.0               # timestamp of last queue mutation
     speed: float = 1.0            # EWMA throughput factor (straggler aware)
     alive: bool = True
+    role: str = "coloc"           # "coloc" | "prefill" | "decode"
+    # decode-capacity blocks promised to in-flight prefill legs (disagg):
+    # counted against b_f when picking a decode target so concurrent
+    # admissions cannot oversubscribe a replica's block budget
+    reserved_blocks: int = 0
+
+    @property
+    def effective_free(self) -> int:
+        """Reported free blocks net of outstanding reservations."""
+        return self.b_f - self.reserved_blocks
+
+    def reserve(self, n: int) -> None:
+        self.reserved_blocks += n
+
+    def unreserve(self, n: int) -> None:
+        self.reserved_blocks = max(0, self.reserved_blocks - n)
 
     # --- event-driven updates -----------------------------------------
     def on_dispatch(self, stub: QueuedStub, now: float) -> None:
@@ -57,6 +73,15 @@ class InstanceState:
         if stub is not None:
             self.prefill_len_total -= stub.prompt_len
             self.n_d += 1
+        self.ts = now
+
+    def on_prefill_exported(self, rid: int, now: float) -> None:
+        """Prefill-role variant of ``on_prefill_done``: the request leaves
+        this replica at handoff, so the decode counter stays untouched
+        (the decode replica's ``n_d`` is bumped at adoption instead)."""
+        stub = self.pre_queue.pop(rid, None)
+        if stub is not None:
+            self.prefill_len_total -= stub.prompt_len
         self.ts = now
 
     def on_finished(self, rid: int) -> None:
@@ -76,6 +101,29 @@ class InstanceState:
         if self.pre_queue:
             tot = max(0.0, tot - max(0.0, now - self.ts))
         return tot / max(self.speed, 1e-6)
+
+
+def decode_need_blocks(req: Request, block_size: int) -> int:
+    """Device blocks a decode replica must hold to adopt this request's
+    KV at handoff — sized from the handoff extent ``needed_context`` ==
+    prompt_len + max(0, generated-1) (exact for fresh admissions AND
+    failover re-admissions; never reads the output-length oracle)."""
+    ctx = req.prompt_len + max(0, req.generated - 1)
+    return -(-ctx // block_size)
+
+
+def pick_decode_target(decode_pool: list[InstanceState], req: Request,
+                       block_size: int) -> Optional[int]:
+    """Alg. 2 line 19, reservation-aware: prefer the decode replica with
+    the most free blocks NET of outstanding reservations, among those
+    that can actually hold the handoff KV; fall back to max effective
+    free when none fits (admission control rejects upstream)."""
+    d_live = [d for d in decode_pool if d.alive]
+    if not d_live:
+        return None
+    need = decode_need_blocks(req, block_size)
+    fits = [d for d in d_live if d.effective_free >= need]
+    return max(fits or d_live, key=lambda d: d.effective_free).iid
 
 
 @dataclass
@@ -250,9 +298,7 @@ class GoRouting:
 
         d_pick = None
         if decode_pool is not None:
-            d_live = [d for d in decode_pool if d.alive]
-            if d_live:
-                d_pick = max(d_live, key=lambda d: d.b_f).iid   # line 19
+            d_pick = pick_decode_target(decode_pool, req, block_size)
         return pick.iid, d_pick
 
 
@@ -275,9 +321,7 @@ class MinLoad:
         pick = min(live, key=lambda p: p.queue_exec_total(now))
         d_pick = None
         if decode_pool is not None:
-            d_live = [d for d in decode_pool if d.alive]
-            if d_live:
-                d_pick = max(d_live, key=lambda d: d.b_f).iid
+            d_pick = pick_decode_target(decode_pool, req, block_size)
         return pick.iid, d_pick
 
 
@@ -296,8 +340,11 @@ class RoundRobin:
         d_pick = None
         if decode_pool is not None:
             d_live = [d for d in decode_pool if d.alive]
-            if d_live:
-                d_pick = d_live[next(self._it) % len(d_live)].iid
+            need = decode_need_blocks(req, block_size)
+            fits = [d for d in d_live
+                    if d.effective_free >= need] or d_live
+            if fits:
+                d_pick = fits[next(self._it) % len(fits)].iid
         return pick.iid, d_pick
 
 

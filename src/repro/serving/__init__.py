@@ -4,7 +4,9 @@ controller, and the async streaming front-end."""
 from .kv_pool import PagedKVPool
 from .prefix_cache import RadixPrefixCache
 from .transfer import TransferDone, TransferWorker
-from .engine import Engine, EngineDriver, EngineStats, StepEvent, TokenEvent
+from .engine import (Engine, EngineDriver, EngineStats, HandoffAdopted,
+                     HandoffDropped, HandoffEvent, HandoffPayload,
+                     StepEvent, TokenEvent)
 from .dispatch import RouterBook
 from .service import ServiceController, ServiceConfig
 from .frontend import (AdmissionError, FrontendConfig, RequestStream,
@@ -12,6 +14,8 @@ from .frontend import (AdmissionError, FrontendConfig, RequestStream,
 
 __all__ = ["PagedKVPool", "RadixPrefixCache", "TransferDone",
            "TransferWorker", "Engine", "EngineDriver",
-           "EngineStats", "StepEvent", "TokenEvent", "RouterBook",
+           "EngineStats", "HandoffAdopted", "HandoffDropped",
+           "HandoffEvent", "HandoffPayload", "StepEvent", "TokenEvent",
+           "RouterBook",
            "ServiceController", "ServiceConfig", "AdmissionError",
            "FrontendConfig", "RequestStream", "ServiceFrontend"]

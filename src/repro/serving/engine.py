@@ -33,6 +33,7 @@ Two driving modes:
 """
 from __future__ import annotations
 
+import dataclasses
 import logging
 import queue
 import threading
@@ -41,13 +42,17 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.batching import BatchPlan, EngineConfig, SchedView
+from ..core.batching import (BatchPlan, EngineConfig, SchedView,
+                             compute_remaining, evict_for_space,
+                             needed_context)
 from ..core.blocks import BlockManager, blocks_for
 from ..core.estimator import BatchLatencyEstimator
 from ..core.request import Phase, Request
+from ..kernels import kv_block_dequantize
 from ..models.model import ArchConfig
 from . import model_exec
 from .kv_pool import PagedKVPool
@@ -66,6 +71,56 @@ class TokenEvent:
     t_wall: float                # time.monotonic() at emission
     first: bool
     last: bool
+
+
+@dataclass
+class HandoffPayload:
+    """One finished prefill leaving a prefill-role replica: the request,
+    everything needed to resume it (prompt + tokens already streamed), and
+    its KV as host-side block payloads — fp32 arrays, or ``(int8 vals,
+    fp32 scales)`` pairs when the handoff wire is quantized (the same
+    per-(layer, K/V)-plane scheme as the cold tier, dequantized ON DEVICE
+    at adoption)."""
+    req: Request
+    prompt: np.ndarray
+    outputs: list            # tokens already emitted (streamed by src)
+    kv_tokens: int           # KV extent shipped == needed_context(req)
+    payloads: list           # per-block: np.ndarray | (vals, scales)
+    quantized: bool
+    src_iid: int = -1        # stamped by the EngineDriver at emission
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.payloads)
+
+    @property
+    def wire_bytes(self) -> int:
+        return sum(b[0].nbytes + b[1].nbytes if isinstance(b, tuple)
+                   else b.nbytes for b in self.payloads)
+
+
+@dataclass(frozen=True)
+class HandoffEvent:
+    """A prefill replica finished a request's prefill leg: its KV payload
+    is ready to be adopted by a decode replica."""
+    iid: int                 # source (prefill) instance
+    payload: HandoffPayload
+
+
+@dataclass(frozen=True)
+class HandoffAdopted:
+    """A decode replica adopted a payload: the decode leg is live there."""
+    iid: int                 # adopting (decode) instance
+    payload: HandoffPayload
+
+
+@dataclass(frozen=True)
+class HandoffDropped:
+    """A decode replica could not adopt a delivered payload (no device
+    blocks even after policy eviction) — the router should fail the
+    request over to a re-prefill."""
+    iid: int                 # target (decode) instance that refused
+    payload: HandoffPayload
 
 
 @dataclass(frozen=True)
@@ -110,6 +165,13 @@ class EngineStats:
     cold_blocks: int = 0           # current int8 cold-tier blocks
     host_syncs: int = 0            # device->host fetches in the hot loop —
     # the perf gate asserts exactly one per model launch (no hidden syncs)
+    # --- disaggregation (prefill/decode split) ---------------------------
+    handoffs_out: int = 0          # prefill legs exported to a decode peer
+    handoff_blocks_out: int = 0    # KV blocks shipped out
+    handoff_bytes_out: int = 0     # wire bytes shipped out (int8 < fp32)
+    handoffs_in: int = 0           # payloads adopted from a prefill peer
+    handoff_blocks_in: int = 0     # KV blocks adopted
+    handoff_bytes_in: int = 0      # wire bytes adopted
     # bounded: long-lived replicas must not grow without limit
     batch_latencies: deque = field(
         default_factory=lambda: deque(maxlen=512))
@@ -127,10 +189,25 @@ class Engine:
                  overlap_transfers: bool = True,
                  fused_decode: bool = True,
                  host_tier_bytes: Optional[int] = None,
-                 cold_quantize: bool = True):
+                 cold_quantize: bool = True,
+                 role: str = "coloc",
+                 handoff_quantize: bool = False):
+        if role not in ("coloc", "prefill", "decode"):
+            raise ValueError(f"unknown engine role: {role!r}")
         self.cfg = cfg
         self.params = params
+        # a role-parameterized replica runs the same pipeline; the role
+        # only (a) flips the policy's pd_mode (prefill replicas price
+        # admission with the prefill-phase phi), (b) arms the handoff
+        # export path (prefill) / import path (decode)
+        self.role = role
+        if role != "coloc" and eng_cfg.pd_mode != role:
+            eng_cfg = dataclasses.replace(eng_cfg, pd_mode=role)
         self.eng_cfg = eng_cfg
+        # int8 handoff wire: quantize the exported KV on device (the cold
+        # tier's kernel pair) so the cross-replica copy is ~4x narrower;
+        # lossy-but-deterministic (|x - deq| <= scale/2 per plane)
+        self.handoff_quantize = handoff_quantize
         self.policy = policy
         self.max_ctx = max_ctx
         # host_tier_bytes bounds the hot host tier (LRU demotion into the
@@ -178,6 +255,11 @@ class Engine:
         # incrementally — avoids the per-chunk prompt+outputs rebuild
         self._seqs: dict[int, np.ndarray] = {}
         self._seq_fill: dict[int, int] = {}
+        # prefill-role export state: payloads whose D2H copy is riding the
+        # background lane (rid -> payload + retained device snapshot), and
+        # completed payloads awaiting pickup by the driver/controller
+        self._handoff_wait: dict[int, tuple[HandoffPayload, object, int]] = {}
+        self._handoff_ready: list[HandoffPayload] = []
         self.queue: list[Request] = []
         self.now = 0.0
         # when set (frontend mode), ``now`` tracks wall time relative to a
@@ -227,7 +309,8 @@ class Engine:
                 self.stats.cache_hit_tokens += hit
 
     def has_work(self) -> bool:
-        return any(r.phase != Phase.FINISHED for r in self.queue)
+        return (any(r.phase != Phase.FINISHED for r in self.queue)
+                or bool(self._handoff_wait) or bool(self._handoff_ready))
 
     # ------------------------------------------------------------------
     # §4.3 transfer lanes (background worker plumbing)
@@ -271,6 +354,25 @@ class Engine:
             return 0
         landed = 0
         for d in self.worker.drain():
+            if d.kind == "d2h" and d.rid in self._handoff_wait:
+                # handoff export riding the D2H lane: the local leg is
+                # already released, so this must be intercepted BEFORE the
+                # stale/dead guards.  Failure falls back to a synchronous
+                # fetch of the retained device snapshot (functional, so
+                # still intact regardless of later pool writes).
+                payload, gathered, epoch = self._handoff_wait[d.rid]
+                if d.epoch == epoch:
+                    del self._handoff_wait[d.rid]
+                    self._epoch.pop(d.rid, None)
+                    if d.ok:
+                        payload.payloads = [d.blocks[bi]
+                                            for bi in sorted(d.blocks)]
+                    else:
+                        self.stats.transfer_failures += 1
+                        payload.payloads = self._materialize_handoff(
+                            gathered, payload.quantized)
+                    self._finalize_handoff(payload)
+                continue
             stale = d.epoch != self._epoch.get(d.rid, 0)
             dead = d.rid not in self.bm.table
             if d.kind == "h2d":
@@ -365,23 +467,173 @@ class Engine:
         if self.cache is not None:
             self.stats.spill_blocks = self.cache.stats.spilled_blocks
 
+    def _evict_to_host(self, r: Request) -> None:
+        """Apply one (already accounted) eviction to the data layer: the
+        surviving span must be on host — with overlap the async mirror
+        already landed (mirrored_blocks only counts real completions);
+        otherwise copy the missing blocks now, in one batched device
+        fetch — then drop the device references."""
+        s = self.bm.state(r)
+        keep_blocks = blocks_for(s.host_tokens, self.bm.block_size)
+        if keep_blocks:
+            h = self.pool.host.get(r.rid, {})
+            missing = [bi for bi in range(keep_blocks) if bi not in h]
+            self.pool.offload_blocks(r.rid, missing)
+        self.pool.drop_device_blocks(r.rid)
+        self._forget_transfers(r.rid)
+        self.stats.evictions += 1
+
     def _sync_pool_with_bm(self, plan: BatchPlan) -> None:
         """Apply the §4.3 directives the policy issued on the accounting
         layer (BlockManager) to the actual data (PagedKVPool)."""
         for r in plan.evictions:
-            s = self.bm.state(r)
-            # the surviving span must be on host: with overlap the async
-            # mirror already landed (mirrored_blocks only counts real
-            # completions); otherwise copy the missing blocks now, in one
-            # batched device fetch
-            keep_blocks = blocks_for(s.host_tokens, self.bm.block_size)
-            if keep_blocks:
-                h = self.pool.host.get(r.rid, {})
-                missing = [bi for bi in range(keep_blocks) if bi not in h]
-                self.pool.offload_blocks(r.rid, missing)
-            self.pool.drop_device_blocks(r.rid)
-            self._forget_transfers(r.rid)
-            self.stats.evictions += 1
+            self._evict_to_host(r)
+
+    # ------------------------------------------------------------------
+    # disaggregation: prefill -> decode KV handoff
+    # ------------------------------------------------------------------
+    def _materialize_handoff(self, gathered, quantized: bool) -> list:
+        """Synchronous fetch of a handoff snapshot into per-block host
+        payloads (the no-worker path, and the failure fallback)."""
+        if quantized:
+            vals, scales = jax.device_get(gathered)
+            vals, scales = np.asarray(vals), np.asarray(scales)
+            return [(vals[i], scales[i]) for i in range(vals.shape[0])]
+        data = np.asarray(jax.device_get(gathered))
+        return [data[i] for i in range(data.shape[0])]
+
+    def _finalize_handoff(self, payload: HandoffPayload) -> None:
+        self.stats.handoffs_out += 1
+        self.stats.handoff_blocks_out += payload.n_blocks
+        self.stats.handoff_bytes_out += payload.wire_bytes
+        self._handoff_ready.append(payload)
+
+    def _collect_handoffs(self) -> None:
+        """Prefill role: any queued request whose prefill leg is complete
+        (first token emitted — or a failover recompute caught up — and the
+        KV fully device-resident) is exported.  Runs before form_batch so
+        an export-ready request is never decoded locally, and again after
+        the step so the common case (prefill finished this iteration)
+        ships without an extra scheduling round."""
+        ready = []
+        for r in self.queue:
+            if r.phase != Phase.DECODE:
+                continue        # output_len == 1 finishes on this replica
+            s = self.bm.table.get(r.rid)
+            if s is None or s.dev_tokens < needed_context(r):
+                continue
+            ready.append(r)
+        for r in ready:
+            self._export_handoff(r)
+
+    def _export_handoff(self, r: Request) -> None:
+        rid = r.rid
+        kv_tokens = needed_context(r)
+        nb = blocks_for(kv_tokens, self.pool.block_size)
+        logical = list(range(nb))
+        payload = HandoffPayload(
+            req=r, prompt=np.asarray(r._prompt, np.int32),  # type: ignore
+            outputs=list(self.outputs.get(rid, [])),
+            kv_tokens=kv_tokens, payloads=[],
+            quantized=self.handoff_quantize)
+        # ONE device gather (quantized on device when the wire is int8);
+        # jax arrays are functional, so the snapshot is race-free and the
+        # local blocks can be released immediately
+        gathered = (self.pool.gather_blocks_quantized(rid, logical)
+                    if self.handoff_quantize
+                    else self.pool.gather_blocks(rid, logical))
+        epoch = self._epoch.get(rid, 0) + 1
+        self._epoch[rid] = epoch
+        if self.worker is not None:
+            self._handoff_wait[rid] = (payload, gathered, epoch)
+            self.worker.offload(rid, epoch, logical, gathered)
+        # release the local leg — the decode replica owns the request now
+        self.bm.release(r)
+        self.pool.release(rid)
+        if self.worker is not None:
+            self.worker.invalidate(rid)
+        self.outputs.pop(rid, None)
+        self._seqs.pop(rid, None)
+        self._seq_fill.pop(rid, None)
+        self.queue = [q for q in self.queue if q.rid != rid]
+        r.instance = None
+        if self.worker is None:
+            self._epoch.pop(rid, None)
+            payload.payloads = self._materialize_handoff(
+                gathered, payload.quantized)
+            self._finalize_handoff(payload)
+
+    def take_handoffs(self) -> list[HandoffPayload]:
+        """Completed handoff payloads since the last call (driver picks
+        these up after each step and forwards them to the router)."""
+        out, self._handoff_ready = self._handoff_ready, []
+        return out
+
+    def handoff_outputs(self, rid: int) -> Optional[list[int]]:
+        """Streamed tokens of a request currently in handoff-export state.
+
+        ``_export_handoff`` pops ``self.outputs[rid]`` the moment the KV
+        snapshot is taken, so a caller mirroring outputs into a durable
+        log after the step would otherwise miss the prefill leg's first
+        token — and a failover resume from that log would drop it.  The
+        payload keeps the authoritative copy until delivery."""
+        ent = self._handoff_wait.get(rid)
+        if ent is not None:
+            return list(ent[0].outputs)
+        for p in self._handoff_ready:
+            if p.req.rid == rid:
+                return list(p.outputs)
+        return None
+
+    def import_handoff(self, payload: HandoffPayload) -> bool:
+        """Decode side: adopt a prefill peer's KV payload and continue the
+        decode leg exactly where the source stopped.  All blocks land in
+        ONE batched scatter; int8 wire payloads are dequantized ON DEVICE.
+        Returns False if device blocks could not be made available (the
+        caller should fail over to a re-prefill)."""
+        req, rid = payload.req, payload.req.rid
+        nb = len(payload.payloads)
+        ok = self.bm.grow(req, payload.kv_tokens, self.now)
+        if not ok:
+            # the admission-time reservation should make this impossible;
+            # evict per policy (mirrors EngineSim.import_request)
+            view = SchedView(self.queue, self.bm, self.est, self.eng_cfg,
+                             self.now)
+            need = self.bm.blocks_needed_for_growth(req, payload.kv_tokens)
+            for v in evict_for_space(view, need, {rid}):
+                self._evict_to_host(v)
+            ok = self.bm.grow(req, payload.kv_tokens, self.now)
+        if not ok or not self.pool.alloc(rid, nb):
+            self.bm.release(req)
+            self.pool.release(rid)
+            return False
+        entries = payload.payloads
+        if entries and all(isinstance(e, tuple) for e in entries):
+            vals = jnp.asarray(np.stack([e[0] for e in entries]))
+            scales = jnp.asarray(np.stack([e[1] for e in entries]))
+            data = kv_block_dequantize(vals, scales)
+        else:
+            data = jnp.asarray(np.stack(entries))
+        phys = jnp.asarray(self.pool.tables[rid], jnp.int32)
+        self.pool.kv = self.pool.kv.at[:, :, phys].set(
+            jnp.moveaxis(data, 0, 2))
+        req.instance = id(self) & 0xffff
+        self.queue.append(req)
+        self.outputs[rid] = list(payload.outputs)
+        prompt = np.asarray(payload.prompt, np.int32)
+        req._prompt = prompt  # type: ignore
+        prior = payload.outputs
+        seq = np.zeros(len(prompt) + max(req.output_len, len(prior)) + 1,
+                       np.int32)
+        seq[:len(prompt)] = prompt
+        if prior:
+            seq[len(prompt):len(prompt) + len(prior)] = prior
+        self._seqs[rid] = seq
+        self._seq_fill[rid] = len(prompt) + len(prior)
+        self.stats.handoffs_in += 1
+        self.stats.handoff_blocks_in += nb
+        self.stats.handoff_bytes_in += payload.wire_bytes
+        return True
 
     def use_wall_clock(self, epoch: float) -> None:
         """Drive ``now`` from ``time.monotonic() - epoch`` (shared across
@@ -397,6 +649,11 @@ class Engine:
         offload_landed = self._drain_transfers()
         self.bm.complete_offloads(self.now)
         self._sync_tier_state()
+        if self.role == "prefill":
+            # straggler exports (e.g. a full-prompt cache hit made the
+            # request decode-ready without any prefill work this step) —
+            # and keeps export-ready requests out of the local batch
+            self._collect_handoffs()
         view = SchedView(self.queue, self.bm, self.est, self.eng_cfg,
                          self.now)
         plan = self.policy.form_batch(view)
@@ -527,6 +784,11 @@ class Engine:
             self._seqs.pop(r.rid, None)
             self._seq_fill.pop(r.rid, None)
         self.queue = [r for r in self.queue if r.phase != Phase.FINISHED]
+        if self.role == "prefill":
+            # export every request whose prefill leg just completed (the
+            # gather runs before the proactive-mirror dispatch below, so
+            # the exported KV ships exactly once)
+            self._collect_handoffs()
         # all K/V written and finished requests released — snapshot +
         # enqueue the proactive D2H mirrors the policy scheduled (the
         # released requests' directives drop out via their empty tables,
@@ -725,6 +987,16 @@ class Engine:
             self.pool.release(r.rid)
             r.instance = None
         self.queue.clear()
+        # handoff payloads in flight or awaiting pickup die with the
+        # replica — their requests must re-prefill elsewhere
+        for payload, _, _ in self._handoff_wait.values():
+            payload.req.instance = None
+            orphans.append(payload.req)
+        self._handoff_wait.clear()
+        for payload in self._handoff_ready:
+            payload.req.instance = None
+            orphans.append(payload.req)
+        self._handoff_ready.clear()
         return orphans
 
 
@@ -767,7 +1039,12 @@ class EngineDriver:
     # -- submission (any thread) ---------------------------------------
     def submit(self, req: Request, prompt_tokens,
                prior_outputs: Optional[list] = None) -> None:
-        self.inbox.put((req, prompt_tokens, prior_outputs))
+        self.inbox.put(("req", req, prompt_tokens, prior_outputs))
+        self._idle.clear()
+
+    def submit_handoff(self, payload: HandoffPayload) -> None:
+        """Deliver a prefill peer's KV payload for adoption (decode leg)."""
+        self.inbox.put(("handoff", payload))
         self._idle.clear()
 
     def pending(self) -> int:
@@ -803,10 +1080,11 @@ class EngineDriver:
         orphans = self.engine.kill()
         while True:
             try:
-                req, _, _ = self.inbox.get_nowait()
+                item = self.inbox.get_nowait()
             except queue.Empty:
                 break
-            orphans.append(req)
+            orphans.append(item[1].req if item[0] == "handoff"
+                           else item[1])
         return orphans
 
     # -- driver thread --------------------------------------------------
@@ -824,13 +1102,24 @@ class EngineDriver:
             drained = False
             while True:
                 try:
-                    req, prompt, prior = self.inbox.get_nowait()
+                    item = self.inbox.get_nowait()
                 except queue.Empty:
                     break
-                eng.add_request(req, prompt, prior_outputs=prior)
-                self._awaiting_first.add(req.rid)
+                if item[0] == "handoff":
+                    payload = item[1]
+                    if eng.import_handoff(payload):
+                        self.sink(HandoffAdopted(self.iid, payload))
+                    else:
+                        self.sink(HandoffDropped(self.iid, payload))
+                else:
+                    _, req, prompt, prior = item
+                    eng.add_request(req, prompt, prior_outputs=prior)
+                    self._awaiting_first.add(req.rid)
                 drained = True
             res = eng.step() if eng.alive else None
+            for payload in eng.take_handoffs():
+                payload.src_iid = self.iid
+                self.sink(HandoffEvent(self.iid, payload))
             if res is None:
                 if not drained and not eng.has_work():
                     self._idle.set()

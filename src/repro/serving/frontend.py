@@ -38,9 +38,11 @@ from typing import AsyncIterator, Optional
 import numpy as np
 
 from ..core.estimator import BatchLatencyEstimator
+from ..core.gorouting import pick_decode_target
 from ..core.request import Request
 from .dispatch import RouterBook
-from .engine import Engine, EngineDriver, StepEvent, TokenEvent
+from .engine import (Engine, EngineDriver, HandoffAdopted, HandoffDropped,
+                     HandoffEvent, HandoffPayload, StepEvent, TokenEvent)
 
 
 class AdmissionError(RuntimeError):
@@ -191,7 +193,8 @@ class ServiceFrontend:
             self.drivers[iid] = driver
             self.book.add_instance(iid, engine.bm.num_device_blocks,
                                    engine.bm.free_blocks,
-                                   has_prefix_cache=engine.cache is not None)
+                                   has_prefix_cache=engine.cache is not None,
+                                   role=engine.role)
         if self._started:
             driver.start()
         return iid
@@ -350,7 +353,45 @@ class ServiceFrontend:
                 self._on_token(iid, ev)
             elif isinstance(ev, StepEvent):
                 self._on_step(ev)
+            elif isinstance(ev, HandoffEvent):
+                self._on_handoff(iid, ev.payload)
+            elif isinstance(ev, HandoffAdopted):
+                self._on_handoff_adopted(ev.iid, ev.payload)
+            elif isinstance(ev, HandoffDropped):
+                self._redispatch(ev.payload.req)
         return sink
+
+    # --- disagg two-leg lifecycle (driver threads) ------------------------
+    def _on_handoff(self, src_iid: int, payload: HandoffPayload) -> None:
+        """A prefill replica exported a payload: forward it to the decode
+        replica reserved at admission — or, if that replica died mid-
+        handoff, to the best surviving decode replica; with none left,
+        fail over to a re-prefill (which route() lands on a coloc
+        replica via the durable log)."""
+        rid = payload.req.rid
+        with self._lock:
+            self.book.on_handoff_sent(src_iid, rid, self._now())
+            d_iid = self.book.decode_target(rid)
+            driver = self.drivers.get(d_iid) if d_iid is not None else None
+            if driver is None:
+                d_pool = [st for st in self.book.states.values()
+                          if st.role == "decode"]
+                d_iid = pick_decode_target(d_pool, payload.req,
+                                           self.book.block_size)
+                driver = (self.drivers.get(d_iid)
+                          if d_iid is not None else None)
+            if driver is not None:
+                self._rid_iid[rid] = d_iid
+        if driver is not None:
+            driver.submit_handoff(payload)
+        else:
+            self._redispatch(payload.req)
+
+    def _on_handoff_adopted(self, iid: int, payload: HandoffPayload) -> None:
+        with self._lock:
+            self.book.on_handoff_delivered(
+                payload.req.rid, iid, payload.n_blocks,
+                payload.wire_bytes, self._now())
 
     def _on_token(self, iid: int, ev: TokenEvent) -> None:
         with self._lock:

@@ -22,9 +22,10 @@ from typing import Optional
 import numpy as np
 
 from ..core.estimator import BatchLatencyEstimator
+from ..core.gorouting import pick_decode_target
 from ..core.request import Request
 from .dispatch import RouterBook
-from .engine import Engine
+from .engine import Engine, HandoffPayload
 
 
 @dataclass
@@ -66,7 +67,8 @@ class ServiceController:
         self.engines[iid] = engine
         self.book.add_instance(iid, engine.bm.num_device_blocks,
                                engine.bm.free_blocks,
-                               has_prefix_cache=engine.cache is not None)
+                               has_prefix_cache=engine.cache is not None,
+                               role=engine.role)
         return iid
 
     def remove_instance(self, iid: int, *, drain: bool = True) -> None:
@@ -109,12 +111,41 @@ class ServiceController:
                                       prior_outputs=_prior)
         return iid
 
+    # --- disagg handoff delivery (synchronous) -----------------------------
+    def _deliver_handoff(self, src_iid: int, payload: HandoffPayload) -> None:
+        """Route one exported payload to its reserved decode replica (or
+        the best surviving one); with no decode capacity left, fail the
+        request over to a re-prefill from the durable log."""
+        rid = payload.req.rid
+        self.book.on_handoff_sent(src_iid, rid, self.now)
+        partial = self.book.logged_partial(rid)
+        if partial is not None:      # the prefill leg's tokens are durable
+            partial[:] = list(payload.outputs)
+        d_iid = self.book.decode_target(rid)
+        eng = self.engines.get(d_iid) if d_iid is not None else None
+        if eng is None:
+            d_pool = [st for st in self.book.states.values()
+                      if st.role == "decode"]
+            d_iid = pick_decode_target(d_pool, payload.req,
+                                       self.book.block_size)
+            eng = self.engines.get(d_iid) if d_iid is not None else None
+        if eng is not None and eng.import_handoff(payload):
+            self.book.on_handoff_delivered(rid, d_iid, payload.n_blocks,
+                                           payload.wire_bytes, self.now)
+        else:
+            self._redispatch(payload.req)
+
     # --- serving loop -------------------------------------------------------
     def step_all(self) -> int:
         """One scheduling round across instances; returns tokens emitted."""
         total = 0
         for iid, eng in list(self.engines.items()):
             res = eng.step()
+            # pick up completed handoff exports even on idle steps (the
+            # async D2H lane can land them while the queue is empty)
+            for payload in eng.take_handoffs():
+                payload.src_iid = iid
+                self._deliver_handoff(iid, payload)
             if res is None:
                 self.book.heartbeat(iid, eng.bm.free_blocks)
                 continue
@@ -125,9 +156,17 @@ class ServiceController:
             for r in res["emitted"]:
                 if r.generated == 1:
                     self.book.on_first_token(iid, r.rid, self.now)
+                outs = eng.outputs.get(r.rid)
+                if outs is None:     # exported at handoff this very step:
+                    # the payload (possibly still in the D2H lane) holds
+                    # the emitted token — it must reach the durable log
+                    # NOW, or a crash before delivery would lose it
+                    outs = eng.handoff_outputs(r.rid)
+                if outs is None:
+                    continue
                 partial = self.book.logged_partial(r.rid)
                 if partial is not None:  # stream into the durable log
-                    partial[:] = eng.outputs[r.rid]
+                    partial[:] = outs
             for r in res["finished"]:
                 self.book.on_finished(iid, r.rid)
                 self.finished.append(r)

@@ -8,7 +8,8 @@ from .cluster import ClusterConfig, ClusterSim, HANDOFF_DELAY
 from .vector import VectorClusterSim, VectorSlideBatching, vectorize_policy
 from .workloads import (WORKLOADS, WorkloadSpec, SCALE_SPEC,
                         iter_scale_trace, scale_mix)
-from .metrics import (StreamingSummary, Summary, summarize, gain_timeline,
+from .metrics import (DISAGG_COUNTERS, StreamingSummary, Summary,
+                      disagg_counters, summarize, gain_timeline,
                       urgent_timeout_timeline)
 from .replay import (ReplayReport, clip_lengths, replay_frontend,
                      replay_sim, replay_sim_stream, synth_prompt)
@@ -19,8 +20,9 @@ __all__ = [
     "HOST_LINK_BW", "DecodeAllPolicy", "EngineSim", "StepResult",
     "ClusterConfig", "ClusterSim", "HANDOFF_DELAY", "VectorClusterSim",
     "VectorSlideBatching", "vectorize_policy", "WORKLOADS", "WorkloadSpec",
-    "SCALE_SPEC", "iter_scale_trace", "scale_mix", "StreamingSummary",
-    "Summary", "summarize", "gain_timeline", "urgent_timeout_timeline",
+    "SCALE_SPEC", "iter_scale_trace", "scale_mix", "DISAGG_COUNTERS",
+    "StreamingSummary", "Summary", "disagg_counters", "summarize",
+    "gain_timeline", "urgent_timeout_timeline",
     "ReplayReport", "clip_lengths", "replay_frontend", "replay_sim",
     "replay_sim_stream", "synth_prompt",
 ]

@@ -22,8 +22,9 @@ from dataclasses import dataclass
 from typing import Optional
 
 from ..core.batching import EngineConfig
+from ..core.blocks import blocks_for
 from ..core.estimator import BatchLatencyEstimator
-from ..core.gorouting import InstanceState, QueuedStub
+from ..core.gorouting import InstanceState, QueuedStub, decode_need_blocks
 from ..core.request import Phase, Request
 from .engine_sim import DecodeAllPolicy, EngineSim
 from .executor import AnalyticalExecutor
@@ -53,6 +54,16 @@ class ClusterConfig:
     # destroying them (SimPrefixCache spill model).  None = legacy
     # unbounded host mirrors + destroy-on-evict cache.
     host_tier_blocks: Optional[int] = None
+    # heterogeneous clusters: per-tier device-block budgets overriding
+    # executor.num_blocks (disagg decode replicas often carry more KV
+    # memory than prefill replicas).  None = homogeneous.
+    prefill_blocks: Optional[int] = None
+    decode_blocks: Optional[int] = None
+    # bytes per KV block on the handoff wire (live fp32 handoffs move
+    # exactly blocks x block_bytes, so setting this to the serving pool's
+    # per-block nbytes makes ClusterSim.handoff_bytes match RouterBook's
+    # live counter).  0 = don't account bytes.
+    handoff_block_bytes: int = 0
 
 
 class ClusterSim:
@@ -72,6 +83,16 @@ class ClusterSim:
         self.decode_engines: dict[int, EngineSim] = {}
         self.decode_states: dict[int, InstanceState] = {}
         self.decode_target: dict[int, int] = {}   # rid -> decode iid (disagg)
+        # disagg two-leg accounting, mirroring serving/dispatch.RouterBook:
+        # rid -> (decode iid, blocks reserved there at admission)
+        self.reservations: dict[int, tuple[int, int]] = {}
+        self.reservation_hits = 0
+        self.reservation_misses = 0
+        self.reserved_blocks_total = 0
+        self.adopted_blocks_total = 0
+        self.handoffs = 0
+        self.handoff_blocks = 0
+        self.handoff_bytes = 0
         self.finished: list[Request] = []
         self.dropped: list[Request] = []
         # streaming mode (run_stream): finished requests are handed to this
@@ -89,21 +110,28 @@ class ClusterSim:
         bmk = dict(self.bm_kwargs)
         if self.ccfg.host_tier_blocks is not None:
             bmk.setdefault("host_budget_blocks", self.ccfg.host_tier_blocks)
-        bm = BlockManager(self.executor.num_blocks, self.executor.block_size,
+        # heterogeneous tiers: each side may override the executor's budget
+        n_blocks = self.executor.num_blocks
+        if prefill and self.ccfg.prefill_blocks is not None:
+            n_blocks = self.ccfg.prefill_blocks
+        elif not prefill and self.ccfg.decode_blocks is not None:
+            n_blocks = self.ccfg.decode_blocks
+        bm = BlockManager(n_blocks, self.executor.block_size,
                           self.executor.t_block, beta=self.eng_cfg.beta,
                           **bmk)
         if prefill:
             cfg = self.eng_cfg
+            role = "coloc"
             if self.ccfg.pd_mode == "disagg":
                 from dataclasses import replace
                 cfg = replace(cfg, pd_mode="prefill")
+                role = "prefill"
             cache = None
             if self.ccfg.prefix_cache:
                 from ..core.prefix import SimPrefixCache
                 cache = SimPrefixCache(
                     self.executor.block_size,
-                    max(1, int(self.executor.num_blocks
-                               * self.ccfg.cache_frac)),
+                    max(1, int(n_blocks * self.ccfg.cache_frac)),
                     spill=self.ccfg.host_tier_blocks is not None,
                     host_budget_blocks=self.ccfg.host_tier_blocks)
             eng = EngineSim(iid, self.make_policy_fn(), self.executor,
@@ -111,14 +139,14 @@ class ClusterSim:
             self.engines[iid] = eng
             self.states[iid] = InstanceState(
                 iid=iid, b_f=bm.num_device_blocks,
-                total_blocks=bm.num_device_blocks)
+                total_blocks=bm.num_device_blocks, role=role)
         else:
             eng = EngineSim(iid, DecodeAllPolicy(), self.executor,
                             self.est, self.eng_cfg, bm)
             self.decode_engines[iid] = eng
             self.decode_states[iid] = InstanceState(
                 iid=iid, b_f=bm.num_device_blocks,
-                total_blocks=bm.num_device_blocks)
+                total_blocks=bm.num_device_blocks, role="decode")
         return iid
 
     # ------------------------------------------------------------------
@@ -213,7 +241,19 @@ class ClusterSim:
         for iid, eng in self.decode_engines.items():
             self.decode_states[iid].b_f = eng.bm.free_blocks
 
+    def _release_reservation(self, rid: int) -> None:
+        """Void rid's decode reservation (finish/failure/re-dispatch)."""
+        res = self.reservations.pop(rid, None)
+        if res is None:
+            return
+        d_iid, need = res
+        st = self.decode_states.get(d_iid)
+        if st is not None:
+            st.unreserve(need)
+
     def _dispatch(self, req: Request, now: float, heap, seq) -> None:
+        # a re-dispatch supersedes any reservation the prior leg held
+        self._release_reservation(req.rid)
         pools = list(self.states.values())
         dpool = (list(self.decode_states.values())
                  if self.ccfg.pd_mode == "disagg" else None)
@@ -240,6 +280,16 @@ class ClusterSim:
                                   req.arrival + req.slo.ttft, exec_est), now)
         if d_iid is not None:
             self.decode_target[req.rid] = d_iid
+            # reserve the handoff blocks on the decode target at admission
+            # (RouterBook.route parity): never oversubscribe — an
+            # unfittable reservation is recorded as a zero-block miss.
+            st_d = self.decode_states[d_iid]
+            need = decode_need_blocks(req, self.executor.block_size)
+            if st_d.reserved_blocks + need > st_d.total_blocks:
+                need = 0
+            st_d.reserve(need)
+            self.reserved_blocks_total += need
+            self.reservations[req.rid] = (d_iid, need)
         eng = self.engines[p_iid]
         eng.add_request(req, now)
         if eng.idle:
@@ -259,12 +309,17 @@ class ClusterSim:
         is_prefill_tier = iid in self.engines
         st = (self.states if is_prefill_tier else self.decode_states)[iid]
         for r in res.prefill_done:
-            st.on_prefill_done(r.rid, res.end)
             if self.ccfg.pd_mode == "disagg" and is_prefill_tier \
                     and r.phase != Phase.FINISHED:
+                # the request leaves at handoff: clear the prefill stub
+                # but leave n_d to the decode replica (live parity)
+                st.on_prefill_exported(r.rid, res.end)
                 self._handoff(r, eng, res.end, heap, seq)
+            else:
+                st.on_prefill_done(r.rid, res.end)
         for r in res.finished:
             st.on_finished(r.rid)
+            self._release_reservation(r.rid)
             if self.on_finished is not None:
                 self.on_finished(r)
             else:
@@ -280,11 +335,12 @@ class ClusterSim:
         d_iid = self.decode_target.get(req.rid)
         if d_iid is None or d_iid not in self.decode_engines \
                 or not self.decode_states[d_iid].alive:
+            self._release_reservation(req.rid)
             alive = [s for s in self.decode_states.values() if s.alive]
             if not alive:
                 self.dropped.append(req)
                 return
-            d_iid = max(alive, key=lambda s: s.b_f).iid
+            d_iid = max(alive, key=lambda s: s.effective_free).iid
         tokens = p_eng.export_request(req)
         heapq.heappush(heap, (now + HANDOFF_DELAY, next(seq), HANDOFF,
                               (req, d_iid, tokens)))
@@ -293,9 +349,30 @@ class ClusterSim:
                        now: float, heap, seq) -> None:
         d_eng = self.decode_engines.get(d_iid)
         if d_eng is None or not d_eng.alive:
+            self._release_reservation(req.rid)
             self.dropped.append(req)
             return
         d_eng.import_request(req, tokens, now)
+        # settle the admission-time reservation: a hit iff the payload
+        # landed on the reserved target with the promised block count
+        # (on_handoff_delivered parity)
+        nb = blocks_for(tokens, self.executor.block_size)
+        res = self.reservations.pop(req.rid, None)
+        if res is not None:
+            r_iid, need = res
+            st_r = self.decode_states.get(r_iid)
+            if st_r is not None:
+                st_r.unreserve(need)
+            if r_iid == d_iid and need == nb:
+                self.reservation_hits += 1
+            else:
+                self.reservation_misses += 1
+        else:
+            self.reservation_misses += 1
+        self.adopted_blocks_total += nb
+        self.handoffs += 1
+        self.handoff_blocks += nb
+        self.handoff_bytes += nb * self.ccfg.handoff_block_bytes
         self.decode_states[d_iid].n_d += 1
         if d_eng.idle:
             heapq.heappush(heap, (max(now, d_eng.busy_until),
@@ -310,6 +387,11 @@ class ClusterSim:
             self.states[iid].alive = False
         if iid in self.decode_states:
             self.decode_states[iid].alive = False
+            # reservations on a dead decode replica are void (the state
+            # is dead, so no unreserve — mirrors RouterBook.drop_instance)
+            for rid, (d_iid, _) in list(self.reservations.items()):
+                if d_iid == iid:
+                    self.reservations.pop(rid, None)
         # failure recovery: re-dispatch from the request log (KV lost)
         for r in orphans:
             self._dispatch(r, now, heap, seq)

@@ -160,6 +160,20 @@ class StreamingSummary:
             per_priority=per_prio)
 
 
+# disagg two-leg accounting: ClusterSim and the live RouterBook expose
+# these counters under identical attribute names, so the sim<->live
+# parity gate (tools/perf_smoke.py) is a dict equality.
+DISAGG_COUNTERS = ("handoffs", "handoff_blocks", "handoff_bytes",
+                   "reservation_hits", "reservation_misses",
+                   "reserved_blocks_total", "adopted_blocks_total")
+
+
+def disagg_counters(source) -> dict[str, int]:
+    """Disagg handoff/reservation counters from a ``ClusterSim`` or a
+    live ``serving.dispatch.RouterBook``."""
+    return {k: int(getattr(source, k)) for k in DISAGG_COUNTERS}
+
+
 def gain_timeline(reqs: Iterable[Request], bucket: float = 1.0,
                   w_p: float = 1.0, w_d: float = 1.0) -> dict[int, float]:
     """TDG earned per time bucket (Fig. 21)."""

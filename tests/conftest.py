@@ -1,0 +1,21 @@
+"""Shared pytest plumbing.
+
+The live-engine test modules each compile dozens of jit variants
+(packed prefill / fused decode / handoff quantize buckets).  XLA's
+compilation caches are never evicted within a process, so by the time
+the later modules compile their own graphs the accumulated executables
+can push the CPU backend into a hard crash on small CI machines.
+Dropping the caches at module teardown keeps peak footprint bounded at
+the cost of per-module recompilation.
+"""
+import pytest
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _bound_jax_compile_cache():
+    yield
+    try:
+        import jax
+        jax.clear_caches()
+    except Exception:
+        pass

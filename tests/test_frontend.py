@@ -192,6 +192,117 @@ def test_frontend_failover_resumes_streams_exactly():
             f"rid {r.rid} diverged across failover"
 
 
+def make_disagg_frontend(*, coloc=True, **cfg_kwargs):
+    """prefill + decode replicas (+ a coloc failover target) behind the
+    async frontend, with the role-aware disagg router."""
+    est = BatchLatencyEstimator(a_p=1e-8, b_p=1e-8, c_p=1e-4, a_d=1e-8,
+                                b_d=1e-3, t_c=1e-2)
+    fe = ServiceFrontend(GoRouting(est, RouterConfig(pd_mode="disagg")),
+                         est, FrontendConfig(**cfg_kwargs))
+
+    def eng(role):
+        return Engine(CFG, PARAMS, EngineConfig(eta=1.0, w_p=4.0, tau=1e9),
+                      make_policy("slidebatching"), num_blocks=160,
+                      block_size=16, max_ctx=256, role=role,
+                      prefix_cache=False)
+
+    roles = ["prefill", "decode"] + (["coloc"] if coloc else [])
+    iids = {role: fe.add_instance(eng(role)) for role in roles}
+    return fe, iids
+
+
+def _disagg_cases(fe, n=4, olen=8):
+    async def submit():
+        cases = []
+        for _ in range(n):
+            plen = int(RNG.integers(12, 28))
+            prompt = RNG.integers(1, CFG.vocab, plen).astype(np.int32)
+            r = Request(prompt_len=plen, output_len=olen, arrival=0.0,
+                        slo=SLO_LOOSE, priority=1)
+            s = await fe.submit(r, prompt)
+            cases.append((r, prompt, s))
+        return cases
+    return submit
+
+
+def test_frontend_disagg_two_leg_streams_exact():
+    """Happy path through the async frontend: prefill replica -> KV
+    handoff -> decode replica, streams measured at the client edge are
+    the exact greedy references and the two-leg accounting settles."""
+    async def run():
+        fe, iids = make_disagg_frontend(coloc=False)
+        await fe.start()
+        cases = await _disagg_cases(fe)()
+        await asyncio.gather(*[s.collect() for _, _, s in cases])
+        await fe.stop()
+        return fe, iids, cases
+
+    fe, iids, cases = asyncio.run(run())
+    for r, prompt, s in cases:
+        assert s.tokens == greedy_reference(prompt, 8), \
+            f"rid {r.rid} diverged across the handoff"
+    book = fe.book
+    assert book.handoffs == len(cases)
+    assert book.reservation_misses == 0
+    assert book.reserved_blocks_total == book.adopted_blocks_total
+    assert book.reservations == {}
+    for st in book.states.values():
+        assert st.reserved_blocks == 0
+
+
+def test_frontend_churn_decode_replica_dies_mid_handoff():
+    """Kill the decode replica once every stream has its first token
+    (handoffs in flight or freshly adopted): each request fails over to
+    a re-prefill on the coloc replica and the client still receives the
+    exact greedy stream — no token lost, none duplicated."""
+    async def run():
+        fe, iids = make_disagg_frontend()
+        await fe.start()
+        cases = await _disagg_cases(fe)()
+        tasks = [asyncio.ensure_future(s.collect()) for _, _, s in cases]
+        deadline = asyncio.get_running_loop().time() + 120.0
+        while any(not s.recv_times for _, _, s in cases):
+            assert asyncio.get_running_loop().time() < deadline
+            await asyncio.sleep(0.005)
+        fe.kill_instance(iids["decode"])
+        await asyncio.gather(*tasks)
+        await fe.stop()
+        return fe, cases
+
+    fe, cases = asyncio.run(run())
+    assert len(fe.finished) == len(cases)
+    for r, prompt, s in cases:
+        assert len(s.tokens) == 8          # nothing lost, nothing doubled
+        assert s.tokens == greedy_reference(prompt, 8), \
+            f"rid {r.rid} diverged across decode-replica death"
+    assert fe.book.reservations == {}
+    for st in fe.book.states.values():
+        assert st.reserved_blocks == 0
+
+
+def test_frontend_churn_prefill_replica_dies_mid_chunk():
+    """Kill the prefill replica right after admission (prompts mid-
+    prefill, KV lost): requests re-dispatch to the coloc replica, which
+    recomputes and streams the exact references."""
+    async def run():
+        fe, iids = make_disagg_frontend()
+        await fe.start()
+        cases = await _disagg_cases(fe)()
+        tasks = [asyncio.ensure_future(s.collect()) for _, _, s in cases]
+        await asyncio.sleep(0.01)          # let prefill chunks start
+        fe.kill_instance(iids["prefill"])
+        await asyncio.gather(*tasks)
+        await fe.stop()
+        return fe, cases
+
+    fe, cases = asyncio.run(run())
+    assert len(fe.finished) == len(cases)
+    for r, prompt, s in cases:
+        assert len(s.tokens) == 8
+        assert s.tokens == greedy_reference(prompt, 8), \
+            f"rid {r.rid} diverged across prefill-replica death"
+
+
 def test_replay_sim_deterministic_and_per_priority():
     """The same trace through the cluster simulator is bit-deterministic
     and reports the per-priority gain/SLO split."""

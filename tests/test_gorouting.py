@@ -112,6 +112,105 @@ def test_straggler_speed_downweights():
     assert pick == 1                    # effective load on slow is 0.8
 
 
+def test_decode_reservation_basics():
+    """Role-aware routing reserves handoff blocks on the decode target at
+    admission; effective_free is what the router sees."""
+    st = InstanceState(iid=0, b_f=100, total_blocks=100, role="decode")
+    st.reserve(30)
+    assert st.reserved_blocks == 30 and st.effective_free == 70
+    st.unreserve(10)
+    assert st.reserved_blocks == 20
+    st.unreserve(50)                       # clamped, never negative
+    assert st.reserved_blocks == 0
+
+
+def test_reserved_blocks_steer_decode_pick():
+    from repro.core.gorouting import pick_decode_target
+    d0 = InstanceState(iid=10, b_f=500, total_blocks=500, role="decode")
+    d1 = InstanceState(iid=11, b_f=400, total_blocks=400, role="decode")
+    r = req(plen=100)
+    assert pick_decode_target([d0, d1], r, 16) == 10
+    d0.reserve(450)                        # d0 is now nearly spoken for
+    assert pick_decode_target([d0, d1], r, 16) == 11
+
+
+def test_reservation_lifecycle_property():
+    """Hypothesis: under any interleaving of admissions and settlements
+    (exact adoption, adoption elsewhere, finish, explicit release, decode
+    replica death), decode reservations NEVER oversubscribe a replica's
+    block budget and are always fully released once every request has
+    settled."""
+    hyp = pytest.importorskip("hypothesis")
+    hst = pytest.importorskip("hypothesis.strategies")
+    from repro.core.gorouting import decode_need_blocks
+    from repro.serving import RouterBook
+
+    settle_modes = ("adopt", "adopt_elsewhere", "finish", "release",
+                    "target_dies")
+
+    @hyp.settings(max_examples=60, deadline=None)
+    @hyp.given(
+        decode_blocks=hst.integers(min_value=4, max_value=48),
+        n_decode=hst.integers(min_value=1, max_value=3),
+        ops=hst.lists(hst.tuples(hst.integers(min_value=8, max_value=600),
+                                 hst.sampled_from(settle_modes)),
+                      min_size=1, max_size=30))
+    def run(decode_blocks, n_decode, ops):
+        book = RouterBook(GoRouting(EST, RouterConfig(pd_mode="disagg")),
+                          EST, prefix_affinity=False)
+        book.add_instance(0, 10_000, 10_000, role="prefill")
+        d_iids = []
+        for k in range(n_decode):
+            book.add_instance(100 + k, decode_blocks, decode_blocks,
+                              role="decode")
+            d_iids.append(100 + k)
+        dead: set[int] = set()
+
+        def check_budgets():
+            for st in book.states.values():
+                assert 0 <= st.reserved_blocks <= st.total_blocks, \
+                    f"iid {st.iid}: {st.reserved_blocks} blocks reserved " \
+                    f"of {st.total_blocks}"
+
+        for plen, mode in ops:
+            r = req(plen)
+            book.log_request(r, None)
+            iid = book.route(r, now=0.0)
+            check_budgets()
+            if iid is None:
+                continue
+            d = book.decode_target(r.rid)
+            nb = decode_need_blocks(r, book.block_size)
+            if mode == "adopt" and d is not None:
+                book.on_handoff_delivered(r.rid, d, nb, 0, 0.0)
+            elif mode == "adopt_elsewhere" and d is not None:
+                other = next((x for x in d_iids
+                              if x != d and x not in dead), d)
+                book.on_handoff_delivered(r.rid, other, nb, 0, 0.0)
+            elif mode == "finish":
+                book.on_finished(iid, r.rid)
+            elif mode == "target_dies" and d is not None:
+                if len([x for x in d_iids if x not in dead]) > 1:
+                    dead.add(d)
+                    book.drop_instance(d)   # voids its reservations
+                else:
+                    book.release_reservation(r.rid)
+            else:
+                book.release_reservation(r.rid)
+            check_budgets()
+
+        # every request settled -> nothing is still spoken for
+        for rid in [r for r in list(book.reservations)]:
+            pass
+        assert all(d in dead or st.reserved_blocks == 0
+                   for d, st in ((s.iid, s)
+                                 for s in book.states.values()))
+        assert not [rid for rid, (d, _) in book.reservations.items()
+                    if d not in dead]
+
+    run()
+
+
 def test_finished_without_prefill_done_cleans_stub():
     """A failover-resumed request can finish on an instance without ever
     reporting prefill-done there; its stub must not leak (it would inflate

@@ -82,6 +82,33 @@ def test_cluster_coloc_and_disagg_complete(exec_est):
         assert done == len(reqs), f"{mode}: {done}/{len(reqs)}"
 
 
+def test_cluster_heterogeneous_disagg_tiers(exec_est):
+    """prefill_blocks/decode_blocks size the tiers asymmetrically; the
+    admission-time decode reservation keeps the fleet consistent and the
+    disagg counters settle (reserved == adopted, everything completes)."""
+    ex, est = exec_est
+    reqs = sharegpt(rate=30, duration=4, seed=9)
+    cs = ClusterSim(lambda: make_policy("slidebatching"),
+                    GoRouting(est, RouterConfig(pd_mode="disagg")),
+                    ex, est, EngineConfig(w_p=4.0),
+                    ClusterConfig(pd_mode="disagg", n_prefill=2,
+                                  n_decode=2, prefill_blocks=2048,
+                                  decode_blocks=16384,
+                                  handoff_block_bytes=4096))
+    assert all(st.total_blocks == 2048 for st in cs.states.values())
+    assert all(st.total_blocks == 16384
+               for st in cs.decode_states.values())
+    cs.run(reqs)
+    assert all(r.finish_time is not None for r in reqs)
+    assert cs.handoffs > 0
+    assert cs.reservation_hits + cs.reservation_misses == cs.handoffs
+    assert cs.reserved_blocks_total == cs.adopted_blocks_total
+    assert cs.handoff_bytes == cs.handoff_blocks * 4096
+    assert cs.reservations == {}
+    for st in list(cs.states.values()) + list(cs.decode_states.values()):
+        assert st.reserved_blocks == 0
+
+
 def test_cluster_failure_recovery(exec_est):
     """Killing an instance mid-run re-dispatches its requests; everything
     still completes (at degraded latency)."""

@@ -192,6 +192,102 @@ def measure_tier(cfg, params, args):
     return rows, failures
 
 
+def measure_disagg(cfg, params, args):
+    """Disaggregated serving parity: live disagg (1 prefill + 1 decode
+    replica, KV handed off over the transfer lanes) vs a coloc engine on
+    the same trace must emit bitwise-identical token streams with every
+    admission-time reservation settling exactly (all hits, reserved ==
+    adopted blocks); a matched ClusterSim replay must then reproduce the
+    RouterBook's disagg counters verbatim (``sim.metrics.disagg_counters``
+    dict equality — the sim<->live accounting contract)."""
+    from repro.core import GoRouting, RouterConfig, SLO, Request
+    from repro.core.estimator import BatchLatencyEstimator
+    from repro.serving import ServiceController
+    from repro.sim import (AnalyticalExecutor, ClusterConfig, ClusterSim,
+                           InstanceHardware, QWEN2_7B, disagg_counters,
+                           replay_sim)
+
+    n = max(4, args.requests // 3)
+    plen, olen = max(16, args.prompt_len // 4), 4
+    trace = make_trace(cfg, n, plen, olen, args.seed)
+
+    # coloc reference: one engine, direct drive
+    ref = build_engine(cfg, params, packed=True, overlap=True, max_ctx=256)
+    for req, prompt in trace:
+        ref.add_request(Request(prompt_len=req.prompt_len,
+                                output_len=req.output_len, arrival=0.0,
+                                slo=SLO(3600.0, 3600.0),
+                                priority=req.priority), prompt)
+    ref.run_until_drained(max_iters=2000)
+    ref_streams = [v for _, v in sorted(ref.outputs.items())]
+    ref.kill()
+
+    # live disagg: prefill + decode replicas behind the controller
+    est = BatchLatencyEstimator(a_p=1e-8, b_p=1e-8, c_p=1e-4, a_d=1e-8,
+                                b_d=1e-3, t_c=1e-2)
+    svc = ServiceController(GoRouting(est, RouterConfig(pd_mode="disagg")),
+                            est)
+    pe = Engine(cfg, params, EngineConfig(eta=1.0, w_p=4.0, tau=1e9),
+                make_policy("slidebatching"), num_blocks=512,
+                block_size=16, max_ctx=256, role="prefill")
+    de = Engine(cfg, params, EngineConfig(eta=1.0, w_p=4.0, tau=1e9),
+                make_policy("slidebatching"), num_blocks=512,
+                block_size=16, max_ctx=256, role="decode")
+    svc.add_instance(pe)
+    svc.add_instance(de)
+    for req, prompt in trace:
+        svc.submit(req, prompt)
+    svc.serve_until_drained()
+    live_streams = [de.outputs.get(req.rid) for req, _ in trace]
+    live = disagg_counters(svc.book)
+    block_bytes = pe.pool.tier.block_bytes
+
+    # matched sim replay: same request shapes through ClusterSim's disagg
+    # path, wire bytes priced at the live pool's per-block footprint
+    ex = AnalyticalExecutor(QWEN2_7B, InstanceHardware(chips=4))
+    sim_est, _ = ex.fit_estimator(n=300)
+    cs = ClusterSim(lambda: make_policy("slidebatching"),
+                    GoRouting(sim_est, RouterConfig(pd_mode="disagg")),
+                    ex, sim_est, EngineConfig(w_p=4.0),
+                    ClusterConfig(pd_mode="disagg", n_prefill=1,
+                                  n_decode=1, prefix_cache=False,
+                                  handoff_block_bytes=block_bytes))
+    sim_reqs = [Request(prompt_len=req.prompt_len,
+                        output_len=req.output_len, arrival=0.0,
+                        slo=SLO(3600.0, 3600.0), priority=req.priority)
+                for req, _ in trace]
+    replay_sim(cs, sim_reqs, w_p=4.0)
+    sim = disagg_counters(cs)
+
+    # stream comparison is positional: requests enter both fleets in the
+    # same submission order, and rids ascend with it on each side
+    row = {"n_requests": n, "prompt_len": plen, "out_len": olen,
+           "block_bytes": block_bytes, "live": live, "sim": sim,
+           "streams_identical": (
+               [tuple(s) for s in live_streams if s is not None]
+               == [tuple(s) for s in ref_streams]
+               and all(s is not None for s in live_streams)),
+           "parity": live == sim}
+    failures = []
+    if not row["streams_identical"]:
+        failures.append("disagg token streams diverged from coloc")
+    if not row["parity"]:
+        failures.append(f"disagg sim<->live counter parity broke: "
+                        f"live={live} sim={sim}")
+    if live["reserved_blocks_total"] != live["adopted_blocks_total"]:
+        failures.append("disagg reserved blocks %d != adopted blocks %d"
+                        % (live["reserved_blocks_total"],
+                           live["adopted_blocks_total"]))
+    if live["reservation_hits"] != n or live["reservation_misses"]:
+        failures.append("disagg reservations did not all settle as hits "
+                        "(%d hits / %d misses over %d requests)"
+                        % (live["reservation_hits"],
+                           live["reservation_misses"], n))
+    for eng in (pe, de):
+        eng.kill()
+    return row, failures
+
+
 def collect(args) -> tuple[dict, list[str]]:
     """Run every measurement; return (bench payload, failure messages)."""
     cfg = get_smoke("qwen1_5_0_5b")
@@ -205,6 +301,7 @@ def collect(args) -> tuple[dict, list[str]]:
                                                args.decode_len)
     (logits_row, fused_row), same_f = measure_fused(cfg, params, args)
     tier_rows, tier_failures = measure_tier(cfg, params, args)
+    disagg_row, disagg_failures = measure_disagg(cfg, params, args)
 
     speedup = fast_p["prefill_tok_per_s"] / max(base_p["prefill_tok_per_s"],
                                                 1e-9)
@@ -213,7 +310,7 @@ def collect(args) -> tuple[dict, list[str]]:
     fused_ratio = fused_row["tpot_proxy_ms"] / max(
         logits_row["tpot_proxy_ms"], 1e-9)
 
-    failures = list(tier_failures)
+    failures = list(tier_failures) + list(disagg_failures)
     if not (same_p and same_d):
         failures.append("token streams diverged between baseline and "
                         "overlapped engines")
@@ -249,8 +346,10 @@ def collect(args) -> tuple[dict, list[str]]:
                           "fused_tpot_ratio": round(fused_ratio, 2),
                           "streams_identical": same_f},
         "kv_tier": tier_rows,
+        "disagg": disagg_row,
         "streams_identical": (same_p and same_d and same_f
-                              and tier_rows["streams_identical"]),
+                              and tier_rows["streams_identical"]
+                              and disagg_row["streams_identical"]),
         "gates": {"min_prefill_speedup": args.min_speedup,
                   "max_tpot_ratio": args.max_tpot_ratio,
                   "max_fused_ratio": args.max_fused_ratio,
@@ -327,7 +426,8 @@ def main(argv=None) -> int:
           f"decode TPOT ratio {payload['decode']['tpot_ratio']:.2f}x, "
           f"fused decode ratio "
           f"{payload['decode_fusion']['fused_tpot_ratio']:.2f}x, "
-          "identical streams, no hidden host syncs")
+          "identical streams (incl. disagg handoff, sim<->live counter "
+          "parity), no hidden host syncs")
     return 0
 
 
