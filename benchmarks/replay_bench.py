@@ -39,8 +39,12 @@ from repro.sim.workloads import WORKLOADS
 from .common import get_exec
 
 # deterministic fields of a replay row (everything except wall time /
-# replay speed) — what the CI scale gate compares bit-for-bit
-NONDETERMINISTIC_KEYS = ("wall_s", "speed")
+# replay speed) — what the CI scale gate compares bit-for-bit.  The spec
+# depth histogram is written as trajectory data but exempt from the
+# cross-build compare: BLAS-dependent estimator fits can flip near-tie
+# scheduling decisions, shuffling a few entries between depth buckets
+# (the scalar counters get the usual 2% float tolerance instead).
+NONDETERMINISTIC_KEYS = ("wall_s", "speed", "spec_depth_hist")
 
 SCALE_PRESETS = {
     # contended: ~0.62 SLO attainment at rate 600 — scheduling decisions
@@ -70,6 +74,17 @@ TIERED_PRESET = {
 DISAGG_PRESET = {
     "rate": 40.0, "duration": 6.0, "seed": 7,
     "n_prefill": 3, "n_decode": 2,
+}
+
+# speculative-decoding smoke (run_spec_preset): the identical sharegpt
+# trace with speculation off and on (k=2, the deterministic per-(rid,
+# step) acceptance oracle from core/spec.py).  The CI gates are the
+# accounting invariants plus a decode tokens/s (1/TPOT) improvement for
+# the HIGH-priority tier: priority 1 keeps full draft depth while lower
+# tiers are penalized, so accepted draft tokens compress its decode
+# steps the most.
+SPEC_PRESET = {
+    "rate": 40.0, "duration": 6.0, "seed": 7, "replicas": 4, "spec_k": 2,
 }
 
 
@@ -243,13 +258,13 @@ def engine_step(fast: bool = True) -> list[dict]:
 # million-request scale replays (vectorized simulator)
 # --------------------------------------------------------------------------
 
-def _scale_cluster(n_prefill: int, vector: bool = True):
+def _scale_cluster(n_prefill: int, vector: bool = True, spec_k: int = 0):
     from repro.sim import VectorClusterSim
     ex, est, _ = get_exec()
     cls = VectorClusterSim if vector else ClusterSim
     return cls(lambda: make_policy("slidebatching"),
                GoRouting(est, RouterConfig(pd_mode="coloc")),
-               ex, est, EngineConfig(w_p=4.0),
+               ex, est, EngineConfig(w_p=4.0, spec_k=spec_k),
                ClusterConfig(pd_mode="coloc", n_prefill=n_prefill))
 
 
@@ -368,6 +383,93 @@ def run_disagg_preset() -> dict:
     return row
 
 
+def run_spec_preset() -> dict:
+    """Speculative-decoding replay: one flat row keyed ``spec`` in
+    BENCH_replay_scale.json.  Depth is priced per decode entry by the
+    shared SlideBatching policy (load/priority policy, block-room cap,
+    estimator tokens/s pricing); acceptance is the deterministic
+    splitmix draw, so the row is bit-reproducible.  The pass/fail gates
+    are the invariant booleans (conservation, bounded depth, and the
+    high-priority decode speedup), recomputed on every run."""
+    import numpy as np
+
+    from repro.sim import spec_counters
+
+    ex, est, _ = get_exec()
+    p = SPEC_PRESET
+    row = {"name": "replay_scale", "preset": "spec", **p}
+    counters: dict = {}
+    for label, k in (("off", 0), ("on", p["spec_k"])):
+        reqs = WORKLOADS["sharegpt"](rate=p["rate"], duration=p["duration"],
+                                     seed=p["seed"])
+        # the acceptance oracle is keyed on (rid, step) and rids come from
+        # a process-global counter — renumber so the draws (and therefore
+        # the committed counters) don't depend on what ran earlier
+        for i, q in enumerate(reqs):
+            q.rid = i
+        row.setdefault("n_requests", len(reqs))
+        cs = ClusterSim(lambda: make_policy("slidebatching"),
+                        GoRouting(est, RouterConfig(pd_mode="coloc")),
+                        ex, est, EngineConfig(w_p=4.0, spec_k=k),
+                        ClusterConfig(pd_mode="coloc",
+                                      n_prefill=p["replicas"]))
+        rep = replay_sim(cs, reqs, w_p=4.0)
+        r = rep.row()
+        for key in ("ttft_p50", "tpot_p50", "tpot_p99", "slo",
+                    "tdg_ratio"):
+            row[f"{key}_{label}"] = r[key]
+        pmin = min(q.priority for q in reqs)
+        hi = [q.tpot for q in reqs
+              if q.priority == pmin and q.tpot is not None]
+        row.setdefault("hi_priority", pmin)
+        hi_tpot = float(np.percentile(hi, 50))
+        row[f"hi_tpot_p50_{label}"] = round(hi_tpot, 6)
+        row[f"hi_decode_tok_per_s_{label}"] = round(
+            1.0 / max(hi_tpot, 1e-12), 2)
+        if k:
+            counters = spec_counters(cs)
+            # floats, so the CI check applies its 2% tolerance (see
+            # NONDETERMINISTIC_KEYS note on BLAS-build jitter)
+            row["spec_proposed"] = float(counters["spec_proposed"])
+            row["spec_accepted"] = float(counters["spec_accepted"])
+            row["spec_rejected"] = float(counters["spec_rejected"])
+            row["spec_depth_hist"] = {str(d): n for d, n in
+                                      counters["spec_depth_hist"].items()}
+    row["spec_conserved"] = (
+        counters["spec_proposed"]
+        == counters["spec_accepted"] + counters["spec_rejected"])
+    row["spec_depth_bounded"] = all(
+        0 <= int(d) <= p["spec_k"] for d in row["spec_depth_hist"])
+    row["hi_decode_speedup"] = round(
+        row["hi_tpot_p50_off"] / max(row["hi_tpot_p50_on"], 1e-12), 4)
+    row["hi_priority_decode_improves"] = (
+        row["hi_tpot_p50_on"] < row["hi_tpot_p50_off"])
+    return row
+
+
+def spec_gate_failures(row: dict) -> list[str]:
+    out = []
+    if not row["spec_proposed"] > 0:
+        out.append("spec replay proposed no draft tokens — speculation "
+                   "never engaged")
+    if not row["spec_accepted"] > 0:
+        out.append("spec replay accepted no draft tokens")
+    if not row["spec_conserved"]:
+        out.append("spec accounting broke: proposed %d != accepted %d + "
+                   "rejected %d" % (row["spec_proposed"],
+                                    row["spec_accepted"],
+                                    row["spec_rejected"]))
+    if not row["spec_depth_bounded"]:
+        out.append("spec depth histogram %r escapes [0, %d]"
+                   % (row["spec_depth_hist"], row["spec_k"]))
+    if not row["hi_priority_decode_improves"]:
+        out.append("high-priority decode tokens/s did not improve with "
+                   "speculation on (%.2f vs %.2f tok/s)"
+                   % (row["hi_decode_tok_per_s_on"],
+                      row["hi_decode_tok_per_s_off"]))
+    return out
+
+
 def disagg_gate_failures(row: dict) -> list[str]:
     out = []
     if not row["disagg_handoffs"] > 0:
@@ -408,25 +510,39 @@ def tiered_gate_failures(row: dict) -> list[str]:
     return out
 
 
-def scale_equivalence_row(n: int = 2000) -> dict:
+def scale_equivalence_row(n: int = 2000, spec_k: int = 0) -> dict:
     """Reference vs vectorized event loop on the same seeded trace slice:
     per-request output timestamps, finish times and preemption counts
     must be IDENTICAL (the tentpole's equivalence contract; the full
-    matrix lives in tests/test_vector_sim.py)."""
-    from repro.sim import iter_scale_trace
+    matrix lives in tests/test_vector_sim.py).  With ``spec_k`` the same
+    contract covers speculative decoding — depth assignment, the
+    acceptance draw and bonus-token emission must agree between the two
+    loops, including the aggregated speculation counters."""
+    from repro.sim import iter_scale_trace, spec_counters
     results = {}
     for vector in (False, True):
-        cs = _scale_cluster(4, vector=vector)
+        cs = _scale_cluster(4, vector=vector, spec_k=spec_k)
         reqs = list(iter_scale_trace(n, rate=600.0, seed=7))
+        # pin rids: the spec acceptance draw is keyed on (rid, step), and
+        # the process-global rid counter would otherwise hand the two
+        # loops different draw sequences
+        for i, r in enumerate(reqs):
+            r.rid = i
         rep = replay_sim(cs, reqs, w_p=4.0)
         per_req = [(tuple(r.out_times), r.finish_time, r.preemptions)
                    for r in reqs]
         row = {k: v for k, v in rep.row().items()
                if k not in NONDETERMINISTIC_KEYS}
+        if spec_k:
+            row.update(spec_counters(cs))
+            row["spec_depth_hist"] = {
+                str(d): v for d, v in row["spec_depth_hist"].items()}
         results[vector] = (per_req, row)
     identical = results[False] == results[True]
-    assert identical, "vectorized sim diverged from the reference loop"
-    return {"name": "replay_scale", "preset": f"equivalence-n{n}",
+    assert identical, "vectorized sim diverged from the reference loop" \
+        + (" (spec on)" if spec_k else "")
+    name = f"equivalence-n{n}" + (f"-spec{spec_k}" if spec_k else "")
+    return {"name": "replay_scale", "preset": name,
             "n_requests": n, "identical_per_request": identical,
             **results[True][1]}
 
@@ -436,8 +552,11 @@ def replay_scale(fast: bool = True) -> list[dict]:
     assert not tiered_gate_failures(tiered), tiered_gate_failures(tiered)
     disagg = run_disagg_preset()
     assert not disagg_gate_failures(disagg), disagg_gate_failures(disagg)
-    rows = [scale_equivalence_row(), run_scale_preset("ci"), tiered,
-            disagg]
+    spec = run_spec_preset()
+    assert not spec_gate_failures(spec), spec_gate_failures(spec)
+    rows = [scale_equivalence_row(),
+            scale_equivalence_row(spec_k=SPEC_PRESET["spec_k"]),
+            run_scale_preset("ci"), tiered, disagg, spec]
     if not fast:
         rows.append(run_scale_preset("full"))
     write_scale_bench(rows)
@@ -532,12 +651,26 @@ def main(argv=None) -> int:
                     help="also run the coloc-vs-disagg smoke and gate "
                          "the handoff-accounting invariants (reserved == "
                          "adopted, every reservation settled)")
+    ap.add_argument("--spec", action="store_true",
+                    help="also run the speculative-decoding replay and "
+                         "gate accounting conservation, bounded depth, "
+                         "reference-vs-vectorized equivalence with spec "
+                         "on, and high-priority decode tokens/s "
+                         "improvement")
     args = ap.parse_args(argv)
 
     failures = []
     if args.equivalence:
         row = scale_equivalence_row()
         print(json.dumps(row, indent=1))
+    if args.spec:
+        erow = scale_equivalence_row(spec_k=SPEC_PRESET["spec_k"])
+        print(json.dumps(erow, indent=1))
+        srow = run_spec_preset()
+        print(json.dumps(srow, indent=1))
+        failures += spec_gate_failures(srow)
+        if args.check:
+            failures += check_scale_row(srow, args.check)
     if args.tiered:
         trow = run_tiered_preset()
         print(json.dumps(trow, indent=1))

@@ -7,6 +7,8 @@ from .blocks import BlockManager, blocks_for
 from .prefix import PrefixRegistry, SimPrefixCache, chunk_hashes
 from .batching import BatchEntry, BatchPlan, EngineConfig, SchedView
 from .slidebatching import SlideBatching
+from .spec import (AcceptanceEWMA, SpecAccounting, expected_tokens,
+                   policy_depth, price_depth, sim_accept_draw, useful_depth)
 from .schedulers import make_policy, POLICIES
 from .gorouting import (GoRouting, MinLoad, RoundRobin, RouterConfig,
                         InstanceState, QueuedStub, ROUTERS)
@@ -16,7 +18,9 @@ __all__ = [
     "weighted_slo_gain", "ta_slo_gain", "BatchLatencyEstimator",
     "BlockManager", "blocks_for", "PrefixRegistry", "SimPrefixCache",
     "chunk_hashes", "BatchEntry", "BatchPlan", "EngineConfig",
-    "SchedView", "SlideBatching", "make_policy", "POLICIES", "GoRouting",
+    "SchedView", "SlideBatching", "AcceptanceEWMA", "SpecAccounting",
+    "expected_tokens", "policy_depth", "price_depth", "sim_accept_draw",
+    "useful_depth", "make_policy", "POLICIES", "GoRouting",
     "MinLoad", "RoundRobin", "RouterConfig", "InstanceState", "QueuedStub",
     "ROUTERS",
 ]

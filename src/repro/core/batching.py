@@ -33,6 +33,11 @@ class EngineConfig:
     w_d: float = 1.0             # decode-token weight
     # deployment
     pd_mode: str = "coloc"       # "coloc" | "prefill" | "decode"
+    # speculative decoding: max draft depth k (0 = off).  The per-request
+    # depth in [0, spec_k] is a scheduler decision (core/spec.py policy +
+    # estimator pricing); the engine/sim execute whatever depth the plan
+    # carries on each BatchEntry.
+    spec_k: int = 0
     # estimator constant overhead is carried by the estimator itself (t_c)
 
 
@@ -51,6 +56,7 @@ class BatchEntry:
     n_tokens: int                # tokens computed this pass
     l_kv: int                    # context length already cached before pass
     is_prefill: bool             # chunked-prefill-style pass vs single decode
+    depth: int = 0               # speculation depth this pass (decode only)
 
     def work_item(self):
         return (self.n_tokens, self.l_kv, self.is_prefill)

@@ -36,6 +36,15 @@ WorkItem = tuple[int, int, bool]
 # the staging scatter and is bandwidth-trivial next to the PCIe copy.
 COLD_WIRE_RATIO = 0.25
 
+# Speculative decoding cost model (core/spec.py drives depth with it).
+# An extra verify row rides the same packed launch as the base decode
+# row, so it costs a fraction of a standalone decode pass; each draft
+# proposal costs a small-model decode step priced relative to the
+# target's.  Both are ratios of T~_d(l_kv) so the fitted coefficients
+# keep working without a separate speculation profile.
+VERIFY_ROW_RATIO = 0.35
+DRAFT_COST_RATIO = 0.2
+
 
 def _features(items: Iterable[WorkItem]) -> np.ndarray:
     """Aggregate batch features [sum l_q^2, sum l_q*l_kv, sum l_q, sum l_kv_d, n_d, 1]."""
@@ -120,6 +129,23 @@ class BatchLatencyEstimator:
         crosses the wire.  ``cold_blocks == 0`` reproduces the legacy
         ``blocks * t_block`` bitwise."""
         return (hot_blocks + COLD_WIRE_RATIO * cold_blocks) * t_block
+
+    def spec_overhead(self, l_kv, depth):
+        """Extra cost of a depth-``depth`` verify launch over a plain
+        decode of the same request: ``depth`` packed verify rows plus
+        ``depth`` draft-model steps, both priced as ratios of
+        T~_d(l_kv).  0 at depth 0 (bitwise: speculation off adds
+        nothing).  Elementwise — scalars or numpy columns."""
+        return ((VERIFY_ROW_RATIO + DRAFT_COST_RATIO) * depth
+                * (self.a_d * l_kv + self.b_d))
+
+    def spec_depth(self, l_kv: int, d_cap: int, rate: float) -> int:
+        """Depth in [0, d_cap] maximizing expected accepted-tokens/s:
+        expected_tokens(d, rate) / (T~_d + spec_overhead(d))."""
+        from .spec import price_depth
+        return price_depth(self.decode_time(l_kv),
+                           lambda d: self.spec_overhead(l_kv, d),
+                           d_cap, rate)
 
     def batch_time(self, items: Iterable[WorkItem]) -> float:
         """T(B), Eq. (7)."""

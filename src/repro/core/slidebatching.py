@@ -26,6 +26,7 @@ from .batching import (BatchEntry, BatchPlan, SchedView, compute_remaining,
                        needed_context)
 from .blocks import blocks_for
 from .request import Phase, Request
+from .spec import AcceptanceEWMA, policy_depth
 
 URGENT, NORMAL = 0, 1
 
@@ -49,6 +50,10 @@ class SlideBatching:
         self.use_density = use_density
         self.use_deadline = use_deadline
         self.latency_aware_budget = latency_aware_budget
+        # speculative-decoding feedback: acceptance-rate EWMA driving the
+        # per-request depth policy (core/spec.py).  The engine/sim report
+        # (proposed, accepted) back after every verify.
+        self.spec_accept = AcceptanceEWMA()
 
     # ------------------------------------------------------------------
     def _phi(self, view: SchedView, metrics: dict[int, _Metrics],
@@ -197,6 +202,45 @@ class SlideBatching:
         return bm.copy_budget(t_fwd_min, t_trans_max,
                               horizon, b_missing, t_block_eff=t_block_eff)
 
+    def _assign_depth(self, view: SchedView, r: Request, l_kv: int,
+                      t0: float, t_left: float,
+                      t_budget: float) -> tuple[int, float]:
+        """Speculation depth for one decode admission.  Returns
+        (depth, admission time incl. verify+draft overhead).
+
+        Order of caps: the load/priority policy (core/spec.py), the
+        remaining-output cap (never draft past output_len), the
+        block-room cap (speculative KV slots must fit the blocks the
+        plain grow-by-1 already reserves, so block accounting is
+        untouched), the estimator's tokens/s pricing, and finally the
+        budget collapse — depth steps toward 0 before the admission
+        loop would shed this request from the batch.  The same method
+        runs in the vectorized sim fast path, so depth decisions stay
+        result-identical."""
+        cfg, est = view.cfg, view.est
+        k = cfg.spec_k
+        if k <= 0 or r.output_len - r.generated <= 1:
+            return 0, t0
+        rate = self.spec_accept.rate
+        load = 0.0
+        if 0.0 < t_budget < float("inf"):
+            load = 1.0 - t_left / t_budget
+        d = int(policy_depth(load, r.priority, rate, k))
+        d = min(d, r.output_len - r.generated - 1)
+        bs = view.bm.block_size
+        room = (bs - ((l_kv + 1) % bs)) % bs
+        d = min(d, room)
+        if d > 0:
+            d = est.spec_depth(l_kv, d, rate)
+        if d == 0 and room >= 1 and self.spec_accept.probe():
+            # explore: policy/pricing declined but a depth-1 draft fits
+            # the block — probe periodically so the acceptance estimate
+            # can recover (zero-speculation is otherwise absorbing).
+            d = 1
+        while d > 0 and t0 + est.spec_overhead(l_kv, d) > t_left:
+            d -= 1
+        return d, (t0 + est.spec_overhead(l_kv, d)) if d else t0
+
     def _admit(self, view: SchedView, r: Request, t_left: float,
                token_cap, tokens_used: int, copy_budget: int,
                protect: set[int], plan: BatchPlan):
@@ -230,13 +274,15 @@ class SlideBatching:
         # --- decode step (context fully resident) --------------------------
         if todo == 0 and r.phase == Phase.DECODE:
             l_kv = needed_context(r)
-            t = est.decode_time(l_kv)
+            t0 = est.decode_time(l_kv)
+            depth, t = self._assign_depth(view, r, l_kv, t0, t_left,
+                                          plan.t_budget)
             if t > t_left and plan.entries:
                 return None, 0.0, used_copy
             if not grow_with_eviction(view, r, 1, protect | {r.rid},
                                       plan.evictions):
                 return None, 0.0, used_copy
-            return BatchEntry(r, 1, l_kv, False), t, used_copy
+            return BatchEntry(r, 1, l_kv, False, depth), t, used_copy
 
         # --- (chunked) prefill / recompute ---------------------------------
         if todo <= 0:

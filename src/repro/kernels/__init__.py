@@ -1,11 +1,12 @@
 """Pallas TPU kernels for the serving hot paths (+ interpret-mode CPU
 validation): paged flash-decode attention, chunked-prefill flash attention,
 KV block gather.  ref.py holds the pure-jnp oracles."""
-from .ops import (paged_decode_attention, chunked_prefill_attention,
-                  packed_prefill_attention, block_gather,
-                  kv_block_quantize, kv_block_dequantize)
+from .ops import (paged_decode_attention, packed_verify_attention,
+                  chunked_prefill_attention, packed_prefill_attention,
+                  block_gather, kv_block_quantize, kv_block_dequantize)
 from . import ref
 
-__all__ = ["paged_decode_attention", "chunked_prefill_attention",
-           "packed_prefill_attention", "block_gather",
-           "kv_block_quantize", "kv_block_dequantize", "ref"]
+__all__ = ["paged_decode_attention", "packed_verify_attention",
+           "chunked_prefill_attention", "packed_prefill_attention",
+           "block_gather", "kv_block_quantize", "kv_block_dequantize",
+           "ref"]

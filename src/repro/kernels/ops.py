@@ -16,6 +16,7 @@ from .chunked_prefill import packed_prefill_attention as _packed_prefill
 from .kv_quant import kv_block_dequantize as _kv_dequant
 from .kv_quant import kv_block_quantize as _kv_quant
 from .paged_attention import paged_decode_attention as _paged_decode
+from .spec_verify import packed_verify_attention as _packed_verify
 
 
 def _interpret_default() -> bool:
@@ -28,6 +29,14 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths,
     it = _interpret_default() if interpret is None else interpret
     return _paged_decode(q, k_pages, v_pages, block_tables, lengths,
                          interpret=it)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def packed_verify_attention(q, k_pages, v_pages, block_tables, lengths,
+                            row_seg, interpret: bool | None = None):
+    it = _interpret_default() if interpret is None else interpret
+    return _packed_verify(q, k_pages, v_pages, block_tables, lengths,
+                          row_seg, interpret=it)
 
 
 @partial(jax.jit, static_argnames=("kv_block", "interpret"))

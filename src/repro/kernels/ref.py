@@ -34,6 +34,17 @@ def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, lengths):
     return o.reshape(b, h, hd).astype(q.dtype)
 
 
+def packed_verify_attention_ref(q, k_pages, v_pages, block_tables, lengths,
+                                row_seg):
+    """Packed speculative-verify oracle: rows sharing a request share a
+    block-table row via ``row_seg``.  q: (R, H, hd); pages:
+    (P, page, Hkv, hd); block_tables: (S, maxp); lengths/row_seg: (R,).
+    Gathers each row's table and then applies the exact
+    ``paged_decode_attention_ref`` math.  Returns (R, H, hd)."""
+    return paged_decode_attention_ref(q, k_pages, v_pages,
+                                      block_tables[row_seg], lengths)
+
+
 def chunked_prefill_attention_ref(q, k_cache, v_cache, cache_lens):
     """Chunked-prefill attention: the new chunk's K/V are ALREADY written
     into the cache at [cache_lens - Sq, cache_lens).

@@ -3,6 +3,7 @@ batching engine, threaded engine drivers, the synchronous GoRouting service
 controller, and the async streaming front-end."""
 from .kv_pool import PagedKVPool
 from .prefix_cache import RadixPrefixCache
+from .spec import DraftRunner
 from .transfer import TransferDone, TransferWorker
 from .engine import (Engine, EngineDriver, EngineStats, HandoffAdopted,
                      HandoffDropped, HandoffEvent, HandoffPayload,
@@ -12,7 +13,7 @@ from .service import ServiceController, ServiceConfig
 from .frontend import (AdmissionError, FrontendConfig, RequestStream,
                        ServiceFrontend)
 
-__all__ = ["PagedKVPool", "RadixPrefixCache", "TransferDone",
+__all__ = ["PagedKVPool", "RadixPrefixCache", "DraftRunner", "TransferDone",
            "TransferWorker", "Engine", "EngineDriver",
            "EngineStats", "HandoffAdopted", "HandoffDropped",
            "HandoffEvent", "HandoffPayload", "StepEvent", "TokenEvent",

@@ -57,6 +57,7 @@ from ..models.model import ArchConfig
 from . import model_exec
 from .kv_pool import PagedKVPool
 from .prefix_cache import RadixPrefixCache
+from .spec import DraftRunner
 from .transfer import TransferWorker
 
 logger = logging.getLogger(__name__)
@@ -172,6 +173,12 @@ class EngineStats:
     handoffs_in: int = 0           # payloads adopted from a prefill peer
     handoff_blocks_in: int = 0     # KV blocks adopted
     handoff_bytes_in: int = 0      # wire bytes adopted
+    # --- speculative decoding (draft propose + packed verify) ------------
+    spec_proposed: int = 0         # draft tokens proposed for verification
+    spec_accepted: int = 0         # proposals matching the target argmax
+    spec_rejected: int = 0         # proposals refuted (== proposed - accepted)
+    draft_launches: int = 0        # draft-model jit calls (prefill + rounds)
+    spec_depth_hist: dict = field(default_factory=dict)  # depth -> entries
     # bounded: long-lived replicas must not grow without limit
     batch_latencies: deque = field(
         default_factory=lambda: deque(maxlen=512))
@@ -191,9 +198,13 @@ class Engine:
                  host_tier_bytes: Optional[int] = None,
                  cold_quantize: bool = True,
                  role: str = "coloc",
-                 handoff_quantize: bool = False):
+                 handoff_quantize: bool = False,
+                 spec_draft: Optional[tuple] = None,
+                 spec_draft_blocks: Optional[int] = None):
         if role not in ("coloc", "prefill", "decode"):
             raise ValueError(f"unknown engine role: {role!r}")
+        if eng_cfg.spec_k > 0 and spec_draft is None:
+            raise ValueError("spec_k > 0 requires spec_draft=(cfg, params)")
         self.cfg = cfg
         self.params = params
         # a role-parameterized replica runs the same pipeline; the role
@@ -237,6 +248,15 @@ class Engine:
         # hatch and for the fused-vs-unfused perf/equivalence gate
         self.fused_decode = fused_decode
         self.overlap_transfers = overlap_transfers
+        # speculative decoding: a draft replica proposes, the target packs
+        # all (request, position) rows into ONE verify_step launch; greedy
+        # acceptance keeps streams bitwise-identical to plain decode
+        self.draft: Optional[DraftRunner] = None
+        if spec_draft is not None and self.eng_cfg.spec_k > 0:
+            dcfg, dparams = spec_draft
+            self.draft = DraftRunner(
+                dcfg, dparams, num_blocks=spec_draft_blocks or num_blocks,
+                block_size=block_size, max_ctx=max_ctx)
         self.worker: Optional[TransferWorker] = (
             TransferWorker() if overlap_transfers else None)
         if self.cache is not None:
@@ -481,6 +501,8 @@ class Engine:
             self.pool.offload_blocks(r.rid, missing)
         self.pool.drop_device_blocks(r.rid)
         self._forget_transfers(r.rid)
+        if self.draft is not None:
+            self.draft.drop(r.rid)
         self.stats.evictions += 1
 
     def _sync_pool_with_bm(self, plan: BatchPlan) -> None:
@@ -555,6 +577,8 @@ class Engine:
         self.outputs.pop(rid, None)
         self._seqs.pop(rid, None)
         self._seq_fill.pop(rid, None)
+        if self.draft is not None:
+            self.draft.drop(rid)
         self.queue = [q for q in self.queue if q.rid != rid]
         r.instance = None
         if self.worker is None:
@@ -720,44 +744,10 @@ class Engine:
 
         # --- decode batch ---------------------------------------------------
         if decode_entries:
-            rids = [e.req.rid for e in decode_entries]
-            nb = len(decode_entries)
-            for e in decode_entries:
-                self.pool.ensure_capacity(e.req.rid, e.l_kv + 1)
-                if self.pool.ensure_writable(e.req.rid,
-                                             e.l_kv // self.pool.block_size):
-                    self.bm.note_fork(e.req)
-                    self.stats.cow_forks += 1
-            maxp = max(len(self.pool.tables[r]) for r in rids)
-            if self.fused_decode:
-                # pad batch/table to shape buckets (extra rows: token 0,
-                # len 0, null-block table) and fetch only the (B,) argmax
-                b_b = model_exec.seg_bucket(nb)
-                maxp_b = model_exec.table_bucket(maxp)
-                lens = np.zeros(b_b, np.int32)
-                lens[:nb] = [e.l_kv for e in decode_entries]
-                last = np.zeros(b_b, np.int32)
-                last[:nb] = [self._last_token(e.req)
-                             for e in decode_entries]
-                table = self.pool.table_array(rids, maxp=maxp_b, rows=b_b)
-                toks, self.pool.kv = model_exec.decode_step(
-                    self.cfg, self.params, self.pool.kv,
-                    jnp.asarray(last), table, jnp.asarray(lens))
-                nxt = np.asarray(toks)[:nb]
+            if self.draft is not None:
+                self._run_decode_spec(decode_entries, emitted)
             else:
-                lens = np.array([e.l_kv for e in decode_entries], np.int32)
-                table = self.pool.table_array(rids, maxp=maxp)
-                last = np.array(
-                    [self._last_token(e.req) for e in decode_entries],
-                    np.int32)
-                logits, self.pool.kv = model_exec.decode_batch(
-                    self.cfg, self.params, self.pool.kv, jnp.asarray(last),
-                    table, jnp.asarray(lens))
-                nxt = np.asarray(jnp.argmax(logits, -1))
-            self.stats.decode_launches += 1
-            self.stats.host_syncs += 1
-            for e, tok in zip(decode_entries, nxt):
-                self._emit(e.req, int(tok), emitted)
+                self._run_decode(decode_entries, emitted)
 
         latency = time.monotonic() - t0
         if self._wall_epoch is not None:
@@ -774,6 +764,8 @@ class Engine:
         for r in finished:
             self.bm.release(r)
             self.pool.release(r.rid)
+            if self.draft is not None:
+                self.draft.drop(r.rid)
             # drop all per-request transfer state — long-lived replicas
             # must not grow without bound.  A late completion for this rid
             # is caught by the dead-request guard in _drain_transfers (rid
@@ -800,6 +792,138 @@ class Engine:
                 "offload_blocks": offload_landed,
                 "reload_blocks": step_reload,
                 "transfer_wait": step_wait}
+
+    # ------------------------------------------------------------------
+    # decode execution
+    # ------------------------------------------------------------------
+    def _run_decode(self, decode_entries: list, emitted: list) -> None:
+        """Plain decode: one token per request in one launch (fused argmax
+        or the logits fallback)."""
+        rids = [e.req.rid for e in decode_entries]
+        nb = len(decode_entries)
+        for e in decode_entries:
+            self.pool.ensure_capacity(e.req.rid, e.l_kv + 1)
+            if self.pool.ensure_writable(e.req.rid,
+                                         e.l_kv // self.pool.block_size):
+                self.bm.note_fork(e.req)
+                self.stats.cow_forks += 1
+        maxp = max(len(self.pool.tables[r]) for r in rids)
+        if self.fused_decode:
+            # pad batch/table to shape buckets (extra rows: token 0,
+            # len 0, null-block table) and fetch only the (B,) argmax
+            b_b = model_exec.seg_bucket(nb)
+            maxp_b = model_exec.table_bucket(maxp)
+            lens = np.zeros(b_b, np.int32)
+            lens[:nb] = [e.l_kv for e in decode_entries]
+            last = np.zeros(b_b, np.int32)
+            last[:nb] = [self._last_token(e.req)
+                         for e in decode_entries]
+            table = self.pool.table_array(rids, maxp=maxp_b, rows=b_b)
+            toks, self.pool.kv = model_exec.decode_step(
+                self.cfg, self.params, self.pool.kv,
+                jnp.asarray(last), table, jnp.asarray(lens))
+            nxt = np.asarray(toks)[:nb]
+        else:
+            lens = np.array([e.l_kv for e in decode_entries], np.int32)
+            table = self.pool.table_array(rids, maxp=maxp)
+            last = np.array(
+                [self._last_token(e.req) for e in decode_entries],
+                np.int32)
+            logits, self.pool.kv = model_exec.decode_batch(
+                self.cfg, self.params, self.pool.kv, jnp.asarray(last),
+                table, jnp.asarray(lens))
+            nxt = np.asarray(jnp.argmax(logits, -1))
+        self.stats.decode_launches += 1
+        self.stats.host_syncs += 1
+        for e, tok in zip(decode_entries, nxt):
+            self._emit(e.req, int(tok), emitted)
+
+    def _run_decode_spec(self, decode_entries: list, emitted: list) -> None:
+        """Speculative decode: the draft proposes up to ``e.depth`` tokens
+        per request, then ONE ``verify_step`` launch scores every
+        (request, position) row packed together — depth-0 requests
+        contribute their single plain-decode row.  Greedy acceptance takes
+        the leading proposals that match the target argmax and emits one
+        bonus token per match, so the stream is bitwise-identical to plain
+        decode (the verify rows ARE plain decode rows; see
+        kernels/spec_verify.py).  Depth was capped at admission to the
+        current block's remainder, so all speculative writes land in
+        blocks the +1-token growth already reserved."""
+        for e in decode_entries:
+            self.pool.ensure_capacity(e.req.rid, e.l_kv + 1 + e.depth)
+            if self.pool.ensure_writable(e.req.rid,
+                                         e.l_kv // self.pool.block_size):
+                self.bm.note_fork(e.req)
+                self.stats.cow_forks += 1
+        launches0 = self.draft.launches
+        syncs0 = self.draft.syncs
+        items = [(e.req.rid, self._seq_view(e.req), e.depth)
+                 for e in decode_entries if e.depth > 0]
+        proposals = self.draft.propose(items) if items else {}
+        self.stats.draft_launches += self.draft.launches - launches0
+        self.stats.host_syncs += self.draft.syncs - syncs0
+        for e in decode_entries:
+            if e.depth > 0 and e.req.rid not in proposals:
+                e.depth = 0      # draft pool exhausted: plain decode row
+
+        # pack one verify row per (request, draft position); tables stay
+        # compact — one row per REQUEST — addressed via row_seg.  The
+        # segment bucket reserves one extra all-zero row so padding rows'
+        # K/V write lands in the null block (decode_step convention).
+        rids = [e.req.rid for e in decode_entries]
+        n_seg = len(decode_entries)
+        rows: list[tuple] = []   # (entry index, token)
+        for i, e in enumerate(decode_entries):
+            rows.append((i, self._last_token(e.req)))
+            for t in proposals.get(e.req.rid, [])[:e.depth]:
+                rows.append((i, t))
+        n_rows = len(rows)
+        r_b = model_exec.seg_bucket(n_rows)
+        s_b = model_exec.seg_bucket(n_seg + 1)
+        maxp = max(len(self.pool.tables[r]) for r in rids)
+        maxp_b = model_exec.table_bucket(maxp)
+        tokens = np.zeros(r_b, np.int32)
+        lens = np.zeros(r_b, np.int32)
+        row_seg = np.full(r_b, n_seg, np.int32)   # padding -> zero table row
+        starts = np.zeros(n_seg, np.int32)
+        prev = -1
+        for ri, (i, tok) in enumerate(rows):
+            if i != prev:
+                starts[i] = ri
+                prev = i
+            tokens[ri] = tok
+            lens[ri] = decode_entries[i].l_kv + (ri - starts[i])
+            row_seg[ri] = i
+        tables = self.pool.table_array(rids, maxp=maxp_b, rows=s_b)
+        toks, self.pool.kv = model_exec.verify_step(
+            self.cfg, self.params, self.pool.kv, jnp.asarray(tokens),
+            tables, jnp.asarray(lens), jnp.asarray(row_seg))
+        self.stats.decode_launches += 1
+        self.stats.host_syncs += 1
+        out = np.asarray(toks)
+
+        for i, e in enumerate(decode_entries):
+            d = e.depth
+            g = out[starts[i]:starts[i] + d + 1]
+            props = proposals.get(e.req.rid, [])[:d]
+            a = 0
+            while a < d and props[a] == g[a]:
+                a += 1
+            for t in g[:a + 1]:
+                self._emit(e.req, int(t), emitted)
+            # bonus tokens advance context inside blocks the +1 growth
+            # already covers (depth <= block remainder at admission)
+            self.bm.state(e.req).dev_tokens += a
+            if d > 0:
+                self.draft.observe(e.req.rid, d, a)
+                accept = getattr(self.policy, "spec_accept", None)
+                if accept is not None:
+                    accept.update(d, a)
+            self.stats.spec_proposed += d
+            self.stats.spec_accepted += a
+            self.stats.spec_rejected += d - a
+            self.stats.spec_depth_hist[d] = \
+                self.stats.spec_depth_hist.get(d, 0) + 1
 
     # ------------------------------------------------------------------
     # prefill execution
@@ -985,6 +1109,8 @@ class Engine:
         for r in orphans:
             self.bm.release(r)
             self.pool.release(r.rid)
+            if self.draft is not None:
+                self.draft.drop(r.rid)
             r.instance = None
         self.queue.clear()
         # handoff payloads in flight or awaiting pickup die with the

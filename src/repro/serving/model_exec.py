@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels.ops import (chunked_prefill_attention,
-                           packed_prefill_attention, paged_decode_attention)
+                           packed_prefill_attention, packed_verify_attention,
+                           paged_decode_attention)
 from ..models.layers import apply_norm, apply_rope, gelu_mlp, swiglu
 from ..models.model import ArchConfig, _qkv
 
@@ -99,6 +100,72 @@ def decode_step(cfg: ArchConfig, params, pool_kv, tokens, tables, lens):
     table entries past ``lens``."""
     logits, pool_kv = _decode_forward(cfg, params, pool_kv, tokens, tables,
                                       lens)
+    return jnp.argmax(logits, -1).astype(jnp.int32), pool_kv
+
+
+def _verify_forward(cfg: ArchConfig, params, pool_kv, tokens, tables, lens,
+                    row_seg):
+    """Packed speculative-verify forward: ``_decode_forward`` over an
+    EXPANDED row set — one row per (request, draft position j), where row
+    j carries the token at position l_kv + j and ``lens`` = l_kv + j.
+    ``tables`` stays compact at (S, maxp): ``row_seg`` maps each row to
+    its request's table row (the packed-verify kernel reads it via
+    scalar prefetch; the K/V scatter gathers it host-of-kernel).
+
+    Causality inside one launch follows the decode convention: every
+    row's K/V is scattered BEFORE attention within each layer, and row
+    j's length mask (lens + 1) covers exactly rows <= j of its own
+    request — so row j+1 attends to row j's same-launch write and the
+    packed rows reproduce sequential greedy decode bitwise."""
+    r = tokens.shape[0]
+    bs = pool_kv.shape[3]
+    x = params["embed"][tokens][:, None, :].astype(pool_kv.dtype)
+    positions = lens[:, None]
+    row_tables = tables[row_seg]                          # (R, maxp)
+    block_of = row_tables[jnp.arange(r), lens // bs]      # (R,)
+    slot_of = lens % bs
+
+    def layer(carry, xs):
+        x, pool = carry
+        lp, li = xs["p"], xs["i"]
+        h = apply_norm(x, lp["ln1"], cfg.norm)
+        q, k, v = _qkv(cfg, lp["attn"], h)
+        if cfg.rope_fraction > 0:
+            q = apply_rope(q, positions, cfg.rope_fraction, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_fraction, cfg.rope_theta)
+        layer_kv = jax.lax.dynamic_index_in_dim(pool, li, 0, keepdims=False)
+        layer_kv = layer_kv.at[0, block_of, slot_of].set(k[:, 0])
+        layer_kv = layer_kv.at[1, block_of, slot_of].set(v[:, 0])
+        pool = jax.lax.dynamic_update_index_in_dim(pool, layer_kv, li, 0)
+        o = packed_verify_attention(q[:, 0], layer_kv[0], layer_kv[1],
+                                    tables, lens + 1, row_seg)
+        a_out = jnp.einsum("bk,kd->bd", o.reshape(r, -1),
+                           lp["attn"]["wo"])[:, None]
+        x = x + a_out
+        h2 = apply_norm(x, lp["ln2"], cfg.norm)
+        x = x + _mlp(cfg, lp, h2)
+        return (x, pool), None
+
+    xs = {"p": params["layers"],
+          "i": jnp.arange(cfg.n_layers, dtype=jnp.int32)}
+    (x, pool_kv), _ = jax.lax.scan(layer, (x, pool_kv), xs)
+    x = apply_norm(x, params["ln_f"], cfg.norm)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"])[:, 0]
+    return logits, pool_kv
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
+def verify_step(cfg: ArchConfig, params, pool_kv, tokens, tables, lens,
+                row_seg):
+    """Fused speculative-verify step: greedy argmax for all packed rows
+    in one launch.  tokens/lens/row_seg: (R,) int32 (row-bucket padded);
+    tables: (S, maxp) int32 (segment-bucket padded).  Padding rows carry
+    token 0, length 0 and point at an all-zero pad table row, so their
+    K/V write lands in the reserved null block 0 (decode_step
+    convention) and their output token is discarded by the caller.
+    Returns ((R,) int32 argmax tokens, new pool)."""
+    logits, pool_kv = _verify_forward(cfg, params, pool_kv, tokens, tables,
+                                      lens, row_seg)
     return jnp.argmax(logits, -1).astype(jnp.int32), pool_kv
 
 

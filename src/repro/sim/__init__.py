@@ -8,9 +8,9 @@ from .cluster import ClusterConfig, ClusterSim, HANDOFF_DELAY
 from .vector import VectorClusterSim, VectorSlideBatching, vectorize_policy
 from .workloads import (WORKLOADS, WorkloadSpec, SCALE_SPEC,
                         iter_scale_trace, scale_mix)
-from .metrics import (DISAGG_COUNTERS, StreamingSummary, Summary,
-                      disagg_counters, summarize, gain_timeline,
-                      urgent_timeout_timeline)
+from .metrics import (DISAGG_COUNTERS, SPEC_COUNTERS, StreamingSummary,
+                      Summary, disagg_counters, spec_counters, summarize,
+                      gain_timeline, urgent_timeout_timeline)
 from .replay import (ReplayReport, clip_lengths, replay_frontend,
                      replay_sim, replay_sim_stream, synth_prompt)
 
@@ -21,8 +21,9 @@ __all__ = [
     "ClusterConfig", "ClusterSim", "HANDOFF_DELAY", "VectorClusterSim",
     "VectorSlideBatching", "vectorize_policy", "WORKLOADS", "WorkloadSpec",
     "SCALE_SPEC", "iter_scale_trace", "scale_mix", "DISAGG_COUNTERS",
-    "StreamingSummary", "Summary", "disagg_counters", "summarize",
-    "gain_timeline", "urgent_timeout_timeline",
+    "SPEC_COUNTERS", "StreamingSummary", "Summary", "disagg_counters",
+    "spec_counters", "summarize", "gain_timeline",
+    "urgent_timeout_timeline",
     "ReplayReport", "clip_lengths", "replay_frontend", "replay_sim",
     "replay_sim_stream", "synth_prompt",
 ]

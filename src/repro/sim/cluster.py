@@ -104,6 +104,34 @@ class ClusterSim:
             self._new_instance(prefill=False)
 
     # ------------------------------------------------------------------
+    # speculative-decoding counters, aggregated over both tiers so
+    # sim.metrics.spec_counters works on a ClusterSim exactly like it
+    # does on a single EngineSim or the live EngineStats.
+    def _all_engines(self):
+        yield from self.engines.values()
+        yield from self.decode_engines.values()
+
+    @property
+    def spec_proposed(self) -> int:
+        return sum(e.spec_proposed for e in self._all_engines())
+
+    @property
+    def spec_accepted(self) -> int:
+        return sum(e.spec_accepted for e in self._all_engines())
+
+    @property
+    def spec_rejected(self) -> int:
+        return sum(e.spec_rejected for e in self._all_engines())
+
+    @property
+    def spec_depth_hist(self) -> dict:
+        hist: dict[int, int] = {}
+        for e in self._all_engines():
+            for d, n in e.spec_depth_hist.items():
+                hist[d] = hist.get(d, 0) + n
+        return hist
+
+    # ------------------------------------------------------------------
     def _new_instance(self, prefill: bool) -> int:
         iid = next(self._iid)
         from ..core.blocks import BlockManager

@@ -24,6 +24,7 @@ from ..core.blocks import BlockManager
 from ..core.estimator import BatchLatencyEstimator
 from ..core.prefix import SimPrefixCache
 from ..core.request import Phase, Request
+from ..core.spec import SIM_TRUE_ACCEPT_RATE, sim_accept_draw
 from .executor import AnalyticalExecutor
 
 
@@ -88,6 +89,20 @@ class EngineSim:
         self.copy_blocks = 0       # H2D reload blocks consumed (§4.3 lane;
         # the real engine surfaces the same signal via StepEvent.reload_blocks)
         self.batch_log: list[tuple[float, int, float]] = []  # (t, n, latency)
+        # speculative decoding mirror (cfg.spec_k > 0): per-entry depth
+        # comes from the policy's BatchPlan; acceptance is drawn from the
+        # deterministic oracle below (overridable, e.g. perf_smoke pins
+        # always-accept to match an equal-params live run) at the fixed
+        # workload truth ``spec_true_rate`` — the policy's EWMA then
+        # estimates that truth from outcomes, like the live engine
+        # estimates draft/target agreement.  Counters use the live
+        # EngineStats names so sim<->live parity is dict equality.
+        self.spec_accept_fn = sim_accept_draw
+        self.spec_true_rate = SIM_TRUE_ACCEPT_RATE
+        self.spec_proposed = 0
+        self.spec_accepted = 0
+        self.spec_rejected = 0
+        self.spec_depth_hist: dict[int, int] = {}
 
     # ------------------------------------------------------------------
     def add_request(self, req: Request, now: float) -> None:
@@ -127,6 +142,11 @@ class EngineSim:
             return None
         self.idle = False
         latency = self.executor.batch_latency(plan.work_items())
+        if self.cfg.spec_k > 0:
+            # verify rows + draft steps ride the same launch: price the
+            # per-entry overhead on top of the plain decode batch time
+            latency += sum(self.est.spec_overhead(e.l_kv, e.depth)
+                           for e in plan.entries if e.depth > 0)
         end = now + latency
         # pipelined reload that outlasts the forward extends the batch
         end = max(end, self.bm.h2d.busy_until)
@@ -153,8 +173,25 @@ class EngineSim:
                             self.bm.donate_to_cache(r, adopted)
                         self.prefix_cache.shrink_to_capacity()
             else:
+                accepted = 0
+                if e.depth > 0:
+                    accepted = self.spec_accept_fn(
+                        r.rid, r.generated, e.depth, self.spec_true_rate)
+                    self.policy.spec_accept.update(e.depth, accepted)
+                if self.cfg.spec_k > 0:
+                    self.spec_proposed += e.depth
+                    self.spec_accepted += accepted
+                    self.spec_rejected += e.depth - accepted
+                    self.spec_depth_hist[e.depth] = \
+                        self.spec_depth_hist.get(e.depth, 0) + 1
                 r.emit_token(end)
                 res.emitted.append(r)
+                for _ in range(accepted):
+                    # bonus tokens verified this step: same timestamp (one
+                    # launch), context advances within the blocks already
+                    # reserved (depth was capped to the block remainder)
+                    r.emit_token(end)
+                s.dev_tokens += accepted
             if r.phase == Phase.FINISHED:
                 r.finish_time = end
                 self.bm.release(r)

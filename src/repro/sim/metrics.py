@@ -174,6 +174,21 @@ def disagg_counters(source) -> dict[str, int]:
     return {k: int(getattr(source, k)) for k in DISAGG_COUNTERS}
 
 
+# speculative-decoding accounting: EngineSim / ClusterSim and the live
+# EngineStats expose these under identical attribute names, so the
+# sim<->live parity gate (tools/perf_smoke.py) is again a dict equality.
+SPEC_COUNTERS = ("spec_proposed", "spec_accepted", "spec_rejected")
+
+
+def spec_counters(source) -> dict:
+    """Speculation counters (plus the depth histogram) from an
+    ``EngineSim``, ``ClusterSim`` or live ``serving.engine.EngineStats``."""
+    out: dict = {k: int(getattr(source, k)) for k in SPEC_COUNTERS}
+    out["spec_depth_hist"] = {int(d): int(n) for d, n in
+                              sorted(dict(source.spec_depth_hist).items())}
+    return out
+
+
 def gain_timeline(reqs: Iterable[Request], bucket: float = 1.0,
                   w_p: float = 1.0, w_d: float = 1.0) -> dict[int, float]:
     """TDG earned per time bucket (Fig. 21)."""

@@ -195,6 +195,10 @@ class VectorSlideBatching(SlideBatching):
                     continue                           # nothing to compute
                 # --- decode step (context fully resident) -----------------
                 t = float(dec_admit[i])
+                depth = 0
+                if cfg.spec_k > 0:
+                    depth, t = self._assign_depth(view, r, needed_i, t,
+                                                  t_left, t_budget)
                 if t > t_left and entries:
                     continue
                 need_blk = 1 if dev_now % bs == 0 else 0
@@ -212,7 +216,7 @@ class VectorSlideBatching(SlideBatching):
                         if full - s.mirrored_blocks - s.pending_offload >= \
                                 n_off_map.get(r.priority, n_off_default):
                             bm._maybe_offload(r, now)
-                entries.append(BatchEntry(r, 1, needed_i, False))
+                entries.append(BatchEntry(r, 1, needed_i, False, depth))
                 lkv_col.append(needed_i)
                 lq_col.append(1)
                 isp_col.append(False)

@@ -28,6 +28,9 @@ from repro.core.estimator import BatchLatencyEstimator
 from repro.models import forward, init_params
 from repro.serving import Engine, ServiceController
 
+# real-model end-to-end matrix: runs in the CI slow shard
+pytestmark = pytest.mark.slow
+
 CFG = get_smoke("qwen1_5_0_5b")
 PARAMS = init_params(CFG, jax.random.PRNGKey(0))
 SLO_LOOSE = SLO(3600.0, 3600.0)

@@ -3,6 +3,7 @@ teacher forcing, including through preemption / offload / reload."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_smoke
 from repro.core import EngineConfig, Request, SLO, make_policy
@@ -10,6 +11,9 @@ from repro.models import forward, init_params
 from repro.serving import Engine, ServiceController
 from repro.core.gorouting import GoRouting, RouterConfig
 from repro.core.estimator import BatchLatencyEstimator
+
+# real-model end-to-end matrix: runs in the CI slow shard
+pytestmark = pytest.mark.slow
 
 CFG = get_smoke("qwen1_5_0_5b")
 PARAMS = init_params(CFG, jax.random.PRNGKey(0))

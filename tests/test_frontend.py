@@ -18,6 +18,9 @@ from repro.sim import (AnalyticalExecutor, ClusterConfig, ClusterSim,
                        InstanceHardware, QWEN2_7B, clip_lengths, replay_sim)
 from repro.sim.workloads import sharegpt
 
+# real-model end-to-end matrix: runs in the CI slow shard
+pytestmark = pytest.mark.slow
+
 CFG = get_smoke("qwen1_5_0_5b")
 PARAMS = init_params(CFG, jax.random.PRNGKey(0))
 RNG = np.random.default_rng(0)

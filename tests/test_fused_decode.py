@@ -12,6 +12,9 @@ from repro.models import init_params
 from repro.serving import Engine
 from repro.serving.model_exec import seg_bucket, table_bucket
 
+# real-model end-to-end matrix: runs in the CI slow shard
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def model():

@@ -14,6 +14,8 @@ from repro.kernels.ref import (block_gather_ref,
                                kv_block_quantize_ref,
                                paged_decode_attention_ref)
 
+pytestmark = pytest.mark.kernel
+
 KEY = jax.random.PRNGKey(7)
 
 

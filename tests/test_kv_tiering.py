@@ -12,6 +12,9 @@ from repro.core.estimator import COLD_WIRE_RATIO, BatchLatencyEstimator
 from repro.serving.kv_pool import KVTierStore
 from repro.serving.transfer import TransferWorker
 
+# real-model end-to-end matrix: runs in the CI slow shard
+pytestmark = pytest.mark.slow
+
 RNG = np.random.default_rng(11)
 
 # synthetic block shape (L, 2, bs, Hkv, hd) — small but full-rank

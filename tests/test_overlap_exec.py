@@ -17,6 +17,9 @@ from repro.serving import Engine
 from repro.serving.kv_pool import PagedKVPool
 from repro.serving.transfer import TransferWorker
 
+# real-model end-to-end matrix: runs in the CI slow shard
+pytestmark = pytest.mark.slow
+
 CFG = get_smoke("qwen1_5_0_5b")
 PARAMS = init_params(CFG, jax.random.PRNGKey(0))
 RNG = np.random.default_rng(7)

@@ -1,0 +1,150 @@
+"""Property tests for the speculation depth controller and acceptance
+accounting (core/spec.py).  Requires hypothesis (CI installs it via the
+``test`` extra; skipped where absent)."""
+import pytest
+
+from repro.core.spec import (AcceptanceEWMA, SpecAccounting, expected_tokens,
+                             policy_depth, price_depth, sim_accept_draw,
+                             useful_depth)
+
+
+def test_depth_bounds_grid():
+    """Exhaustive small grid (no hypothesis needed): depth in [0, k]."""
+    for k in range(0, 5):
+        for pr in range(1, 4):
+            for load in (0.0, 0.3, 0.9, 1.0, 2.0, -1.0):
+                for rate in (0.0, 0.2, 0.8, 1.0):
+                    d = policy_depth(load, pr, rate, k)
+                    assert 0 <= d <= k
+
+
+def test_depth_property_matrix():
+    hyp = pytest.importorskip("hypothesis")
+    hst = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=60, deadline=None)
+    @hyp.given(load=hst.floats(min_value=-1.0, max_value=2.0,
+                               allow_nan=False),
+               priority=hst.integers(min_value=1, max_value=5),
+               rate=hst.floats(min_value=0.0, max_value=1.0,
+                               allow_nan=False),
+               k=hst.integers(min_value=0, max_value=8))
+    def run(load, priority, rate, k):
+        d = policy_depth(load, priority, rate, k)
+        assert 0 <= d <= k
+        # priority penalty: lower priority never speculates deeper
+        assert d >= policy_depth(load, priority + 1, rate, k)
+
+    run()
+
+
+def test_depth_monotone_under_load():
+    """For fixed priority/rate/k, rising load never INCREASES depth —
+    the controller collapses speculation before shedding batch width."""
+    hyp = pytest.importorskip("hypothesis")
+    hst = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=60, deadline=None)
+    @hyp.given(loads=hst.lists(hst.floats(min_value=0.0, max_value=1.0,
+                                          allow_nan=False),
+                               min_size=2, max_size=10),
+               priority=hst.integers(min_value=1, max_value=3),
+               rate=hst.floats(min_value=0.05, max_value=1.0,
+                               allow_nan=False),
+               k=hst.integers(min_value=1, max_value=6))
+    def run(loads, priority, rate, k):
+        depths = [policy_depth(x, priority, rate, k)
+                  for x in sorted(loads)]
+        assert all(a >= b for a, b in zip(depths, depths[1:]))
+
+    run()
+
+
+def test_accounting_conservation():
+    """proposed == accepted + rejected across ANY event sequence, and the
+    depth histogram counts every event exactly once."""
+    hyp = pytest.importorskip("hypothesis")
+    hst = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=60, deadline=None)
+    @hyp.given(events=hst.lists(
+        hst.tuples(hst.integers(min_value=0, max_value=8),
+                   hst.floats(min_value=0.0, max_value=1.0,
+                              allow_nan=False)),
+        max_size=50))
+    def run(events):
+        acc = SpecAccounting()
+        ewma = AcceptanceEWMA()
+        for depth, frac in events:
+            accepted = min(depth, int(frac * (depth + 1)))
+            acc.record(depth, accepted)
+            if depth > 0:
+                ewma.update(depth, accepted)
+            assert 0.0 <= ewma.rate <= 1.0
+        acc.check()
+        assert acc.proposed == acc.accepted + acc.rejected
+        assert sum(acc.depth_hist.values()) == len(events)
+
+    run()
+
+
+def test_probe_recovers_from_declined_state():
+    """Zero-speculation must not be absorbing: with the rate stuck below
+    every engagement threshold, every probe_every-th declined
+    opportunity still fires a depth-1 probe, and a streak of accepted
+    probes lifts the estimate back above the pricing cliff."""
+    ewma = AcceptanceEWMA(init=0.1, probe_every=4)
+    fires = [ewma.probe() for _ in range(12)]
+    assert fires == [False, False, False, True] * 3
+    for _ in range(20):                # probes keep observing accepts
+        ewma.update(1, 1)
+    assert ewma.rate > 0.9
+
+
+def test_accounting_rejects_invalid():
+    acc = SpecAccounting()
+    with pytest.raises(ValueError):
+        acc.record(2, 3)      # accepted > depth
+    with pytest.raises(ValueError):
+        acc.record(-1, 0)
+
+
+def test_sim_accept_draw_properties():
+    hyp = pytest.importorskip("hypothesis")
+    hst = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=60, deadline=None)
+    @hyp.given(rid=hst.integers(min_value=0, max_value=10**6),
+               step=hst.integers(min_value=0, max_value=10**4),
+               depth=hst.integers(min_value=0, max_value=8),
+               rate=hst.floats(min_value=0.0, max_value=1.0,
+                               allow_nan=False))
+    def run(rid, step, depth, rate):
+        a = sim_accept_draw(rid, step, depth, rate)
+        assert 0 <= a <= depth
+        # deterministic: the sim replays identically
+        assert a == sim_accept_draw(rid, step, depth, rate)
+
+    run()
+    # degenerate rates are exact
+    assert sim_accept_draw(1, 1, 5, 1.0) == 5
+    assert sim_accept_draw(1, 1, 5, 0.0) == 0
+
+
+def test_pricing_sanity():
+    # higher acceptance rate never prices a SHALLOWER depth
+    t0 = 1e-4
+
+    def oh(d):
+        return 0.55 * d * t0
+
+    prev = 0
+    for rate in (0.1, 0.3, 0.5, 0.8, 0.95, 1.0):
+        d = price_depth(t0, oh, 4, rate)
+        assert d >= prev
+        prev = d
+    # expected_tokens is monotone in depth and rate
+    assert expected_tokens(3, 0.9) > expected_tokens(2, 0.9)
+    assert expected_tokens(3, 0.9) > expected_tokens(3, 0.5)
+    assert useful_depth(0.0, 4) == 0
+    assert useful_depth(1.0, 4) == 4

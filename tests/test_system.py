@@ -10,6 +10,9 @@ from repro.sim import (AnalyticalExecutor, ClusterConfig, ClusterSim,
                        InstanceHardware, QWEN2_7B, summarize)
 from repro.sim.workloads import industrial
 
+# real-model end-to-end matrix: runs in the CI slow shard
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def setup():

@@ -15,7 +15,7 @@ LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
 # docs that must exist — the docs/*.md glob silently skips missing files,
 # so a deleted BENCHMARKS.md would otherwise pass the link check
 REQUIRED = ("README.md", "docs/ARCHITECTURE.md", "docs/BENCHMARKS.md",
-            "docs/WORKLOADS.md")
+            "docs/TESTING.md", "docs/WORKLOADS.md")
 
 
 def check(root: pathlib.Path) -> list[str]:

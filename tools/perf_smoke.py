@@ -54,7 +54,7 @@ def build_engine(cfg, params, *, packed: bool, overlap: bool,
 
 
 def make_trace(cfg, n_req: int, prompt_len: int, out_len: int, seed: int,
-               vary_out: bool = False):
+               vary_out: bool = False, priority: int = 2):
     """``vary_out`` draws per-request output lengths in
     [out_len/2, out_len], so the decode batch SHRINKS over the run —
     the shape churn that makes bucketed jit caching matter."""
@@ -65,7 +65,7 @@ def make_trace(cfg, n_req: int, prompt_len: int, out_len: int, seed: int,
               if vary_out else out_len)
         reqs.append((Request(prompt_len=prompt_len, output_len=ol,
                              arrival=0.0, slo=SLO(3600.0, 3600.0),
-                             priority=2),
+                             priority=priority),
                      rng.integers(1, cfg.vocab, prompt_len).astype(np.int32)))
     return reqs
 
@@ -288,6 +288,109 @@ def measure_disagg(cfg, params, args):
     return row, failures
 
 
+def measure_spec(cfg, params, args):
+    """Speculative decoding (draft propose + packed verify, high-priority
+    decode trace): spec-on with a same-params draft — every proposal
+    matches the target argmax, the maximum-speculation regime — must emit
+    token streams BITWISE identical to spec-off while finishing in fewer
+    target launches (each accepted draft token rides a verify launch
+    instead of buying its own decode launch); acceptance accounting must
+    conserve with everything accepted; and an ``EngineSim`` replay with
+    the acceptance draw pinned to always-accept must reproduce the live
+    speculation counters verbatim (``sim.metrics.spec_counters`` dict
+    equality — the sim<->live accounting contract).  Depth decisions are
+    timing-free at this scale (load ~ 1e-12 of the tau budget; the
+    acceptance EWMA only rises from its 0.8 prior, never crossing a
+    pricing threshold for k=2), so sharing the estimator and pinning the
+    online refit off makes the counter trajectory deterministic."""
+    from repro.core.estimator import BatchLatencyEstimator
+    from repro.sim import (AnalyticalExecutor, EngineSim, InstanceHardware,
+                           QWEN2_7B, spec_counters)
+
+    n = max(4, args.requests // 3)
+    plen, olen = max(16, args.prompt_len // 2), args.decode_len * 2
+    est = BatchLatencyEstimator(a_p=1e-8, b_p=1e-8, c_p=1e-4, a_d=1e-8,
+                                b_d=1e-3, t_c=1e-2)
+
+    rows, streams, live = {}, {}, None
+    for label, spec_k in (("off", 0), ("on", 2)):
+        for _warm in (True, False):
+            trace = make_trace(cfg, n, plen, olen, args.seed,
+                               vary_out=True, priority=1)
+            kw = {"spec_draft": (cfg, params)} if spec_k else {}
+            eng = Engine(cfg, params,
+                         EngineConfig(eta=1.0, w_p=4.0, tau=1e9,
+                                      spec_k=spec_k),
+                         make_policy("slidebatching"), num_blocks=512,
+                         block_size=16, max_ctx=512, est=est, **kw)
+            eng.refit_every = 10 ** 9   # freeze pricing for sim parity
+            for req, prompt in trace:
+                eng.add_request(req, prompt)
+            t0 = time.monotonic()
+            eng.run_until_drained(max_iters=5000)
+            wall = time.monotonic() - t0
+            outs = {i: eng.outputs[req.rid]
+                    for i, (req, _) in enumerate(trace)}
+            st = eng.stats
+            eng.kill()
+        decode_tokens = st.tokens_out - n
+        rows[label] = {
+            "wall_s": round(wall, 3),
+            "decode_tokens": decode_tokens,
+            "decode_tok_per_s": round(decode_tokens / wall, 1),
+            "decode_launches": st.decode_launches,
+            "draft_launches": st.draft_launches,
+        }
+        streams[label] = outs
+        if spec_k:
+            live = spec_counters(st)
+            rows[label].update(live)
+
+    # matched EngineSim replay: same request shapes, same estimator, the
+    # acceptance oracle pinned to the equal-params regime
+    ex = AnalyticalExecutor(QWEN2_7B, InstanceHardware(chips=4))
+    sim = EngineSim(0, make_policy("slidebatching"), ex, est,
+                    EngineConfig(eta=1.0, w_p=4.0, tau=1e9, spec_k=2))
+    sim.spec_accept_fn = lambda rid, step, depth, rate: depth
+    now, guard = 0.0, 0
+    for req, _ in make_trace(cfg, n, plen, olen, args.seed,
+                             vary_out=True, priority=1):
+        sim.add_request(req, now)
+    while sim.has_work() and guard < 10000:
+        guard += 1
+        res = sim.step(now)
+        if res is None:
+            break
+        now = res.end
+    sim_c = spec_counters(sim)
+
+    row = {"n_requests": n, "prompt_len": plen, "out_len": olen,
+           "off": rows["off"], "on": rows["on"], "sim": sim_c,
+           "streams_identical": streams["off"] == streams["on"],
+           "launch_reduction": round(
+               rows["off"]["decode_launches"]
+               / max(rows["on"]["decode_launches"], 1), 2),
+           "parity": live == sim_c}
+    failures = []
+    if not row["streams_identical"]:
+        failures.append("token streams diverged between spec-off and "
+                        "spec-on engines")
+    if live["spec_proposed"] <= 0:
+        failures.append("speculation never engaged (0 proposals)")
+    if live["spec_accepted"] != live["spec_proposed"]:
+        failures.append("same-params draft must be fully accepted "
+                        "(%d/%d)" % (live["spec_accepted"],
+                                     live["spec_proposed"]))
+    if rows["on"]["decode_launches"] >= rows["off"]["decode_launches"]:
+        failures.append("spec-on did not reduce target decode launches "
+                        "(%d vs %d)" % (rows["on"]["decode_launches"],
+                                        rows["off"]["decode_launches"]))
+    if not row["parity"]:
+        failures.append(f"spec sim<->live counter parity broke: "
+                        f"live={live} sim={sim_c}")
+    return row, failures
+
+
 def collect(args) -> tuple[dict, list[str]]:
     """Run every measurement; return (bench payload, failure messages)."""
     cfg = get_smoke("qwen1_5_0_5b")
@@ -302,6 +405,7 @@ def collect(args) -> tuple[dict, list[str]]:
     (logits_row, fused_row), same_f = measure_fused(cfg, params, args)
     tier_rows, tier_failures = measure_tier(cfg, params, args)
     disagg_row, disagg_failures = measure_disagg(cfg, params, args)
+    spec_row, spec_failures = measure_spec(cfg, params, args)
 
     speedup = fast_p["prefill_tok_per_s"] / max(base_p["prefill_tok_per_s"],
                                                 1e-9)
@@ -310,7 +414,8 @@ def collect(args) -> tuple[dict, list[str]]:
     fused_ratio = fused_row["tpot_proxy_ms"] / max(
         logits_row["tpot_proxy_ms"], 1e-9)
 
-    failures = list(tier_failures) + list(disagg_failures)
+    failures = (list(tier_failures) + list(disagg_failures)
+                + list(spec_failures))
     if not (same_p and same_d):
         failures.append("token streams diverged between baseline and "
                         "overlapped engines")
@@ -347,9 +452,11 @@ def collect(args) -> tuple[dict, list[str]]:
                           "streams_identical": same_f},
         "kv_tier": tier_rows,
         "disagg": disagg_row,
+        "spec": spec_row,
         "streams_identical": (same_p and same_d and same_f
                               and tier_rows["streams_identical"]
-                              and disagg_row["streams_identical"]),
+                              and disagg_row["streams_identical"]
+                              and spec_row["streams_identical"]),
         "gates": {"min_prefill_speedup": args.min_speedup,
                   "max_tpot_ratio": args.max_tpot_ratio,
                   "max_fused_ratio": args.max_fused_ratio,
@@ -372,7 +479,7 @@ def check_bench_file(path: str, payload: dict) -> list[str]:
     if ref.get("schema") != BENCH_SCHEMA:
         errors.append(f"{path}: schema {ref.get('schema')!r} != "
                       f"{BENCH_SCHEMA}")
-    for section in ("prefill", "decode", "decode_fusion", "gates"):
+    for section in ("prefill", "decode", "decode_fusion", "spec", "gates"):
         if section not in ref:
             errors.append(f"{path}: missing section {section!r}")
     if not ref.get("streams_identical", False):
@@ -426,8 +533,10 @@ def main(argv=None) -> int:
           f"decode TPOT ratio {payload['decode']['tpot_ratio']:.2f}x, "
           f"fused decode ratio "
           f"{payload['decode_fusion']['fused_tpot_ratio']:.2f}x, "
-          "identical streams (incl. disagg handoff, sim<->live counter "
-          "parity), no hidden host syncs")
+          f"spec launch reduction "
+          f"{payload['spec']['launch_reduction']:.2f}x, "
+          "identical streams (incl. disagg handoff and speculative "
+          "decode, sim<->live counter parity), no hidden host syncs")
     return 0
 
 
