@@ -14,9 +14,10 @@
   trace measures prefill throughput, a decode trace guards TPOT, and the
   token streams are asserted identical.  The offline counterpart of
   ``tools/perf_smoke.py``.
-* ``replay_scale`` — the vectorized cluster simulator on the 10⁴/10⁵
-  scale presets (streamed trace, streamed metrics), plus a per-request
-  equivalence cross-check against the reference event loop.  Results are
+* ``replay_scale`` — the windowed cluster simulator on the 10⁴/10⁵/10⁶
+  scale presets (streamed trace, streamed metrics; ``--workers N``
+  shards replicas over forked processes), plus per-request equivalence
+  cross-checks against the reference event loop.  Results are
   written to ``BENCH_replay_scale.json`` at the repo root; CI's
   ``sim-scale`` job replays the ``ci`` preset under a wall budget and
   compares the deterministic metrics against the checked-in file
@@ -50,9 +51,14 @@ SCALE_PRESETS = {
     # contended: ~0.62 SLO attainment at rate 600 — scheduling decisions
     # actually matter; finishes in well under the CI wall budget
     "ci": {"n_requests": 10_000, "rate": 600.0, "seed": 7, "replicas": 8},
-    # the acceptance-bar preset: 10⁵ requests, 3 priorities, < 2 min
+    # the 10⁵ preset: 3 priorities, < 2 min single-core; CI's
+    # sim-scale-mp job replays it sharded over 4 workers
     "full": {"n_requests": 100_000, "rate": 450.0, "seed": 7,
-             "replicas": 8},
+             "replicas": 8, "workers": 4, "window": 0.5},
+    # the million-request preset (weekly CI, 4-core bar: < 5 min
+    # sharded over 4 workers — docs/BENCHMARKS.md)
+    "mega": {"n_requests": 1_000_000, "rate": 450.0, "seed": 7,
+             "replicas": 8, "workers": 4, "window": 0.5},
 }
 
 # thrash-regime preset for the tiered KV cache (run_tiered_preset): the
@@ -234,7 +240,9 @@ def engine_step(fast: bool = True) -> list[dict]:
     payload, failures = perf_smoke.collect(args)
     assert not failures, f"perf gates failed: {failures}"
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    with open(os.path.join(root, "BENCH_engine_step.json"), "w") as f:
+    out = os.path.join(root, "BENCH_engine_step.json")
+    perf_smoke.merge_trajectory(payload, out)
+    with open(out, "w") as f:
         json.dump(payload, f, indent=1)
         f.write("\n")
     rows = []
@@ -258,27 +266,71 @@ def engine_step(fast: bool = True) -> list[dict]:
 # million-request scale replays (vectorized simulator)
 # --------------------------------------------------------------------------
 
-def _scale_cluster(n_prefill: int, vector: bool = True, spec_k: int = 0):
-    from repro.sim import VectorClusterSim
+def _scale_cluster(n_prefill: int, loop: str = "windowed",
+                   spec_k: int = 0):
+    from repro.sim import VectorClusterSim, WindowedClusterSim
     ex, est, _ = get_exec()
-    cls = VectorClusterSim if vector else ClusterSim
+    cls = {"reference": ClusterSim, "vector": VectorClusterSim,
+           "windowed": WindowedClusterSim}[loop]
     return cls(lambda: make_policy("slidebatching"),
                GoRouting(est, RouterConfig(pd_mode="coloc")),
                ex, est, EngineConfig(w_p=4.0, spec_k=spec_k),
                ClusterConfig(pd_mode="coloc", n_prefill=n_prefill))
 
 
-def run_scale_preset(preset: str) -> dict:
+def _pinned_trace(n: int, rate: float, seed: int):
+    """Scale trace with rids renumbered 0..n-1 so runs are independent
+    of the process-global rid counter (and of each other)."""
+    from repro.sim import iter_scale_trace
+    for i, r in enumerate(iter_scale_trace(n, rate=rate, seed=seed)):
+        r.rid = i
+        yield r
+
+
+def run_scale_preset(preset: str, loop: str = "windowed") -> dict:
     """One streamed scale replay: the trace is generated lazily
     (``iter_scale_trace``) and metrics fold per completion
-    (``replay_sim_stream``), so peak memory is O(in-flight), not O(n)."""
+    (``replay_sim_stream``), so peak memory is O(in-flight), not O(n).
+    The windowed loop is the default — per-request results are bitwise
+    identical to the vector/reference loops (``scale_equivalence_row``)
+    at lower event-dispatch cost."""
     from repro.sim import iter_scale_trace, replay_sim_stream
     p = SCALE_PRESETS[preset]
-    cs = _scale_cluster(p["replicas"])
+    cs = _scale_cluster(p["replicas"], loop=loop)
     rep = replay_sim_stream(
         cs, iter_scale_trace(p["n_requests"], rate=p["rate"],
-                             seed=p["seed"]), w_p=4.0)
+                             seed=p["seed"]), w_p=4.0,
+        bounded=p["n_requests"] >= 1_000_000)
     return {"name": "replay_scale", "preset": preset, **p, **rep.row()}
+
+
+def run_sharded_preset(preset: str, workers: int | None = None,
+                       window: float | None = None) -> dict:
+    """The scale preset replayed through the sharded stale-view loop:
+    replicas partitioned over forked worker processes, the GoRouting
+    frontend exchanging per-window dispatch/ack batches over pipes.
+    Row key ``{preset}-mp{workers}``.  Metrics differ from the exact
+    loop only through window-delayed routing (bounded, quantified by
+    ``sharded_equivalence_row``); they are identical across worker
+    counts and partitions, so the checked-in row gates determinism."""
+    from repro.sim import iter_scale_trace, replay_sim_sharded
+    p = SCALE_PRESETS[preset]
+    workers = workers if workers is not None else p.get("workers", 4)
+    window = window if window is not None else p.get("window", 0.5)
+    rep, extras = replay_sim_sharded(
+        lambda: _scale_cluster(p["replicas"]),
+        iter_scale_trace(p["n_requests"], rate=p["rate"], seed=p["seed"]),
+        workers=workers, window=window, w_p=4.0,
+        bounded=p["n_requests"] >= 1_000_000)
+    row = {"name": "replay_scale", "preset": f"{preset}-mp{workers}",
+           **{k: v for k, v in p.items() if k not in ("workers", "window")},
+           "workers": workers, "window": window,
+           "windows": extras["windows"], **rep.row()}
+    # floats, so check_scale_row applies its 2% tolerance (BLAS-build
+    # estimator jitter can flip near-tie scheduling decisions)
+    row["prefill_tokens"] = float(extras["counters"]["prefill_tokens"])
+    row["iterations"] = float(extras["counters"]["iterations"])
+    return row
 
 
 def run_tiered_preset() -> dict:
@@ -510,24 +562,26 @@ def tiered_gate_failures(row: dict) -> list[str]:
     return out
 
 
-def scale_equivalence_row(n: int = 2000, spec_k: int = 0) -> dict:
-    """Reference vs vectorized event loop on the same seeded trace slice:
+def scale_equivalence_row(n: int = 2000, spec_k: int = 0,
+                          loop: str = "vector") -> dict:
+    """Reference vs batched event loop on the same seeded trace slice:
     per-request output timestamps, finish times and preemption counts
     must be IDENTICAL (the tentpole's equivalence contract; the full
-    matrix lives in tests/test_vector_sim.py).  With ``spec_k`` the same
-    contract covers speculative decoding — depth assignment, the
-    acceptance draw and bonus-token emission must agree between the two
-    loops, including the aggregated speculation counters."""
-    from repro.sim import iter_scale_trace, spec_counters
+    matrices live in tests/test_vector_sim.py and
+    tests/test_windowed_sim.py).  ``loop`` picks the candidate —
+    ``vector`` (policy vectorization) or ``windowed`` (cross-replica
+    event batching).  With ``spec_k`` the same contract covers
+    speculative decoding — depth assignment, the acceptance draw and
+    bonus-token emission must agree between the two loops, including the
+    aggregated speculation counters."""
+    from repro.sim import spec_counters
     results = {}
-    for vector in (False, True):
-        cs = _scale_cluster(4, vector=vector, spec_k=spec_k)
-        reqs = list(iter_scale_trace(n, rate=600.0, seed=7))
+    for lp in ("reference", loop):
+        cs = _scale_cluster(4, loop=lp, spec_k=spec_k)
         # pin rids: the spec acceptance draw is keyed on (rid, step), and
         # the process-global rid counter would otherwise hand the two
         # loops different draw sequences
-        for i, r in enumerate(reqs):
-            r.rid = i
+        reqs = list(_pinned_trace(n, 600.0, 7))
         rep = replay_sim(cs, reqs, w_p=4.0)
         per_req = [(tuple(r.out_times), r.finish_time, r.preemptions)
                    for r in reqs]
@@ -537,14 +591,57 @@ def scale_equivalence_row(n: int = 2000, spec_k: int = 0) -> dict:
             row.update(spec_counters(cs))
             row["spec_depth_hist"] = {
                 str(d): v for d, v in row["spec_depth_hist"].items()}
-        results[vector] = (per_req, row)
-    identical = results[False] == results[True]
-    assert identical, "vectorized sim diverged from the reference loop" \
+        results[lp] = (per_req, row)
+    identical = results["reference"] == results[loop]
+    assert identical, f"{loop} sim diverged from the reference loop" \
         + (" (spec on)" if spec_k else "")
-    name = f"equivalence-n{n}" + (f"-spec{spec_k}" if spec_k else "")
+    prefix = "" if loop == "vector" else f"{loop}-"
+    name = (f"{prefix}equivalence-n{n}"
+            + (f"-spec{spec_k}" if spec_k else ""))
     return {"name": "replay_scale", "preset": name,
             "n_requests": n, "identical_per_request": identical,
-            **results[True][1]}
+            **results[loop][1]}
+
+
+def sharded_equivalence_row(n: int = 3000, workers: int = 2,
+                            window: float = 0.5) -> dict:
+    """Two gates on the sharded stale-view loop, one row.
+
+    1. Partition-independence (exact): ``workers=0`` (in-process twin of
+       the worker protocol) and ``workers=N`` (forked processes) must
+       produce IDENTICAL per-request results, merged summaries and
+       engine counters — routing sees boundary-frozen views either way,
+       so process placement cannot leak into the physics.
+    2. Stale-view divergence (quantified, not hidden): the same trace
+       through the exact windowed loop, with the deltas recorded as
+       ``stale_delta_*`` fields so the checked-in row documents how far
+       window-delayed routing drifts from per-event routing."""
+    from repro.sim import replay_sim_sharded, replay_sim_stream
+    results = {}
+    for w in (0, workers):
+        rep, extras = replay_sim_sharded(
+            lambda: _scale_cluster(4), _pinned_trace(n, 200.0, 7),
+            workers=w, window=window, w_p=4.0, collect=True)
+        per_req = sorted(
+            (r.rid, tuple(r.out_times), r.finish_time, r.preemptions)
+            for r in extras["finished"])
+        row = {k: v for k, v in rep.row().items()
+               if k not in NONDETERMINISTIC_KEYS}
+        results[w] = (per_req, row, extras["counters"])
+    identical = results[0] == results[workers]
+    assert identical, (f"sharded replay diverged between workers=0 and "
+                       f"workers={workers}")
+    cs = _scale_cluster(4)
+    exact = replay_sim_stream(cs, _pinned_trace(n, 200.0, 7), w_p=4.0)
+    er = exact.row()
+    row = results[workers][1]
+    out = {"name": "replay_scale", "preset": f"sharded-equivalence-n{n}",
+           "n_requests": n, "workers": workers, "window": window,
+           "identical_across_workers": identical, **row}
+    for k in ("ttft_p50", "ttft_p99", "tpot_p50", "slo", "tdg_ratio"):
+        out[f"{k}_exact"] = er[k]
+        out[f"stale_delta_{k}"] = round(row[k] - er[k], 6)
+    return out
 
 
 def replay_scale(fast: bool = True) -> list[dict]:
@@ -556,33 +653,70 @@ def replay_scale(fast: bool = True) -> list[dict]:
     assert not spec_gate_failures(spec), spec_gate_failures(spec)
     rows = [scale_equivalence_row(),
             scale_equivalence_row(spec_k=SPEC_PRESET["spec_k"]),
+            scale_equivalence_row(loop="windowed"),
+            sharded_equivalence_row(),
             run_scale_preset("ci"), tiered, disagg, spec]
     if not fast:
         rows.append(run_scale_preset("full"))
+        rows.append(run_sharded_preset("full"))
     write_scale_bench(rows)
     return rows
 
 
+def _git_commit() -> str:
+    import subprocess
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, timeout=10,
+                             cwd=root).stdout.strip()
+        return out or "unknown"
+    except OSError:
+        return "unknown"
+
+
 def write_scale_bench(rows: list[dict],
                       path: str = "BENCH_replay_scale.json") -> str:
-    """Merge scale rows into the repo-root trajectory file, keyed by
-    preset (a fast run updates ``ci`` without dropping ``full``)."""
+    """Merge scale rows into the repo-root trajectory file.
+
+    ``presets`` holds the latest full row per preset (a fast run updates
+    ``ci`` without dropping ``full``).  ``trajectory`` is append-only
+    perf history: one commit-keyed, timestamp-free entry per run
+    recording each preset's wall time and replay speed, replacing only a
+    prior entry for the SAME commit — so the file accumulates a
+    commit-over-commit speed trace without churning on reruns."""
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     path = os.path.join(root, path)
     payload = {"schema": 1,
                "generated_by": "benchmarks/run.py --only replay_scale",
-               "presets": {}}
+               "presets": {}, "trajectory": []}
     if os.path.exists(path):
         try:
             with open(path) as f:
                 old = json.load(f)
             if old.get("schema") == 1:
                 payload["presets"].update(old.get("presets", {}))
+                payload["trajectory"] = list(old.get("trajectory", []))
         except (OSError, ValueError):
             pass
     for r in rows:
         payload["presets"][r["preset"]] = {k: v for k, v in r.items()
                                            if k not in ("name", "preset")}
+    entry = {"commit": _git_commit(),
+             "rows": {r["preset"]: {
+                 "wall_s": r["wall_s"],
+                 "req_per_s": round(r["submitted"] / max(r["wall_s"],
+                                                         1e-9), 1)}
+                      for r in rows if "wall_s" in r}}
+    if entry["rows"]:
+        # same-commit rerun: merge row-by-row (a partial run must not
+        # drop presets benched earlier at this commit)
+        prev = next((e for e in payload["trajectory"]
+                     if e.get("commit") == entry["commit"]), None)
+        if prev is not None:
+            entry["rows"] = {**prev.get("rows", {}), **entry["rows"]}
+            payload["trajectory"].remove(prev)
+        payload["trajectory"].append(entry)
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
         f.write("\n")
@@ -641,9 +775,27 @@ def main(argv=None) -> int:
     ap.add_argument("--check", default=None,
                     help="BENCH_replay_scale.json to compare the "
                          "deterministic metrics against")
+    ap.add_argument("--loop", choices=("reference", "vector", "windowed"),
+                    default="windowed",
+                    help="event loop for the single-process preset run")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="replay the preset through the sharded "
+                         "multiprocess loop with this many worker "
+                         "processes (0 = single-process --loop run)")
+    ap.add_argument("--window", type=float, default=None,
+                    help="heartbeat window for --workers (default: the "
+                         "preset's, else the cluster heartbeat interval)")
     ap.add_argument("--equivalence", action="store_true",
-                    help="also run the reference-vs-vectorized "
-                         "per-request equivalence cross-check")
+                    help="also run the reference-vs-vectorized and "
+                         "reference-vs-windowed per-request equivalence "
+                         "cross-checks")
+    ap.add_argument("--sharded-equivalence", action="store_true",
+                    help="also gate workers=0 vs forked-worker identity "
+                         "and record stale-view deltas vs the exact loop")
+    ap.add_argument("--bench-out", default=None,
+                    help="merge this run's rows (including a commit-"
+                         "keyed trajectory entry) into the given "
+                         "BENCH_replay_scale.json")
     ap.add_argument("--tiered", action="store_true",
                     help="also run the tiered-KV thrash replay and gate "
                          "tiered > HBM-only on TTFT p50 + prefill tokens")
@@ -660,35 +812,54 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     failures = []
+    bench_rows = []
     if args.equivalence:
-        row = scale_equivalence_row()
-        print(json.dumps(row, indent=1))
+        for loop in ("vector", "windowed"):
+            row = scale_equivalence_row(loop=loop)
+            print(json.dumps(row, indent=1))
+            bench_rows.append(row)
+    if args.sharded_equivalence:
+        srow = sharded_equivalence_row()
+        print(json.dumps(srow, indent=1))
+        bench_rows.append(srow)
+        if args.check:
+            failures += check_scale_row(srow, args.check)
     if args.spec:
         erow = scale_equivalence_row(spec_k=SPEC_PRESET["spec_k"])
         print(json.dumps(erow, indent=1))
-        srow = run_spec_preset()
-        print(json.dumps(srow, indent=1))
-        failures += spec_gate_failures(srow)
+        bench_rows.append(erow)
+        specrow = run_spec_preset()
+        print(json.dumps(specrow, indent=1))
+        bench_rows.append(specrow)
+        failures += spec_gate_failures(specrow)
         if args.check:
-            failures += check_scale_row(srow, args.check)
+            failures += check_scale_row(specrow, args.check)
     if args.tiered:
         trow = run_tiered_preset()
         print(json.dumps(trow, indent=1))
+        bench_rows.append(trow)
         failures += tiered_gate_failures(trow)
         if args.check:
             failures += check_scale_row(trow, args.check)
     if args.disagg:
         drow = run_disagg_preset()
         print(json.dumps(drow, indent=1))
+        bench_rows.append(drow)
         failures += disagg_gate_failures(drow)
         if args.check:
             failures += check_scale_row(drow, args.check)
-    row = run_scale_preset(args.preset)
+    if args.workers:
+        row = run_sharded_preset(args.preset, args.workers, args.window)
+    else:
+        row = run_scale_preset(args.preset, loop=args.loop)
     print(json.dumps(row, indent=1))
+    bench_rows.append(row)
     if args.budget is not None and row["wall_s"] > args.budget:
         failures.append(f"wall {row['wall_s']}s > budget {args.budget}s")
     if args.check:
         failures += check_scale_row(row, args.check)
+    if args.bench_out and not failures:
+        print(f"wrote {write_scale_bench(bench_rows, args.bench_out)}")
     for msg in failures:
         print(f"FAIL: {msg}", file=sys.stderr)
     if failures:

@@ -20,6 +20,11 @@ from .prefix import usable_prefix
 from .request import Request
 
 
+# replica-originated events a frontend can learn about late (window
+# boundaries / heartbeats) — see InstanceState.apply_event
+EV_PREFILL_DONE, EV_FINISHED = 0, 1
+
+
 @dataclass
 class QueuedStub:
     """Router-side view of one in-flight prefill request."""
@@ -93,6 +98,21 @@ class InstanceState:
             self.prefill_len_total -= stub.prompt_len
             return
         self.n_d = max(0, self.n_d - 1)
+
+    def apply_event(self, kind: int, rid: int, t: float) -> None:
+        """Apply one replica-originated event delivered late — the
+        stale-view update path.  The live frontend and the sharded
+        replay both learn about replica progress in delayed batches
+        (heartbeats / window-boundary ack columns), not at the instant
+        it happens; ``t`` is the ORIGINAL event time, so the ``ts``
+        staleness compensation in ``queue_exec_total`` keeps measuring
+        real elapsed progress, not transport lag."""
+        if kind == EV_PREFILL_DONE:
+            self.on_prefill_done(rid, t)
+        elif kind == EV_FINISHED:
+            self.on_finished(rid)
+        else:                                           # pragma: no cover
+            raise ValueError(f"unknown replica event kind {kind}")
 
     def queue_exec_total(self, now: float) -> float:
         """Σ exec over Q_pre with staleness compensation: subtract elapsed

@@ -6,6 +6,9 @@ from .executor import (AnalyticalExecutor, InstanceHardware, ModelProfile,
 from .engine_sim import DecodeAllPolicy, EngineSim, StepResult
 from .cluster import ClusterConfig, ClusterSim, HANDOFF_DELAY
 from .vector import VectorClusterSim, VectorSlideBatching, vectorize_policy
+from .windowed import WindowedClusterSim
+from .shard import (ReplicaShard, ShardedWindowReplay, merge_counters,
+                    replay_sim_sharded)
 from .workloads import (WORKLOADS, WorkloadSpec, SCALE_SPEC,
                         iter_scale_trace, scale_mix)
 from .metrics import (DISAGG_COUNTERS, SPEC_COUNTERS, StreamingSummary,
@@ -19,7 +22,9 @@ __all__ = [
     "QWEN3_32B", "PEAK_FLOPS", "HBM_BW", "ICI_BW", "HBM_BYTES",
     "HOST_LINK_BW", "DecodeAllPolicy", "EngineSim", "StepResult",
     "ClusterConfig", "ClusterSim", "HANDOFF_DELAY", "VectorClusterSim",
-    "VectorSlideBatching", "vectorize_policy", "WORKLOADS", "WorkloadSpec",
+    "VectorSlideBatching", "vectorize_policy", "WindowedClusterSim",
+    "ReplicaShard", "ShardedWindowReplay", "merge_counters",
+    "replay_sim_sharded", "WORKLOADS", "WorkloadSpec",
     "SCALE_SPEC", "iter_scale_trace", "scale_mix", "DISAGG_COUNTERS",
     "SPEC_COUNTERS", "StreamingSummary", "Summary", "disagg_counters",
     "spec_counters", "summarize", "gain_timeline",

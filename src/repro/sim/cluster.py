@@ -280,6 +280,20 @@ class ClusterSim:
             st.unreserve(need)
 
     def _dispatch(self, req: Request, now: float, heap, seq) -> None:
+        p_iid = self._route(req, now)
+        if p_iid is None:
+            return
+        eng = self.engines[p_iid]
+        if eng.idle:
+            heapq.heappush(heap, (max(now, eng.busy_until), next(seq),
+                                  STEP, p_iid))
+
+    def _route(self, req: Request, now: float) -> Optional[int]:
+        """Router half of arrival handling: select an instance, update its
+        frontend view, reserve decode capacity, enqueue on the engine.
+        Returns the chosen prefill iid (None = dropped); the caller owns
+        scheduling the engine wake-up, so the windowed loop can reuse
+        this without a global heap."""
         # a re-dispatch supersedes any reservation the prior leg held
         self._release_reservation(req.rid)
         pools = list(self.states.values())
@@ -298,7 +312,7 @@ class ClusterSim:
             affinity=affinity)
         if p_iid is None:
             self.dropped.append(req)
-            return
+            return None
         if affinity and affinity.get(p_iid):
             exec_est = self.est.prefill_time_cached(
                 req.prompt_len, affinity[p_iid])
@@ -320,9 +334,7 @@ class ClusterSim:
             self.reservations[req.rid] = (d_iid, need)
         eng = self.engines[p_iid]
         eng.add_request(req, now)
-        if eng.idle:
-            heapq.heappush(heap, (max(now, eng.busy_until), next(seq),
-                                  STEP, p_iid))
+        return p_iid
 
     def _engine(self, iid: int) -> Optional[EngineSim]:
         return self.engines.get(iid) or self.decode_engines.get(iid)
@@ -334,6 +346,15 @@ class ClusterSim:
         res = eng.step(now)
         if res is None:
             return
+        self._on_step_result(iid, eng, res, heap, seq)
+        heapq.heappush(heap, (res.end, next(seq), STEP, iid))
+
+    def _on_step_result(self, iid: int, eng: EngineSim, res, heap,
+                        seq) -> None:
+        """Apply one step's outcomes to the frontend view: prefill-done /
+        finished notifications, disagg handoffs, reservation release.
+        Shared by the reference loop and the windowed loop (which passes
+        ``heap=None`` — coloc only, so the disagg branch never fires)."""
         is_prefill_tier = iid in self.engines
         st = (self.states if is_prefill_tier else self.decode_states)[iid]
         for r in res.prefill_done:
@@ -352,7 +373,6 @@ class ClusterSim:
                 self.on_finished(r)
             else:
                 self.finished.append(r)
-        heapq.heappush(heap, (res.end, next(seq), STEP, iid))
 
     def _handoff(self, req: Request, p_eng: EngineSim, now: float,
                  heap, seq) -> None:

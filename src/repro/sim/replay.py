@@ -203,15 +203,18 @@ def replay_sim(cluster, requests: list[Request], *, w_p: float = 1.0,
 
 def replay_sim_stream(cluster, requests: Iterable[Request], *,
                       w_p: float = 1.0, w_d: float = 1.0,
-                      release: bool = True) -> ReplayReport:
+                      release: bool = True,
+                      bounded: bool = False) -> ReplayReport:
     """``replay_sim`` at 10⁵⁺-request scale: arrivals stream from an
     iterator (sorted by arrival — e.g. ``workloads.iter_scale_trace``) and
     metrics fold incrementally as requests finish, so neither the trace
     nor per-request metric lists are ever fully resident.  With
     ``release`` each finished request's token-timestamp list is freed
-    after folding.  Dropped (router-rejected) requests fold in at the end,
-    exactly as ``summarize`` counts them in the list path."""
-    agg = StreamingSummary(w_p=w_p, w_d=w_d)
+    after folding; ``bounded`` swaps exact percentile buffers for the
+    bounded-memory sketch (10⁶ scale).  Dropped (router-rejected)
+    requests fold in at the end, exactly as ``summarize`` counts them in
+    the list path."""
+    agg = StreamingSummary(w_p=w_p, w_d=w_d, bounded=bounded)
 
     def fold(r: Request) -> None:
         agg.add(r)
@@ -272,6 +275,21 @@ def _main(argv: Optional[list] = None) -> None:
                     help="sim mode: vectorized scheduler hot path "
                          "(VectorClusterSim — identical per-request "
                          "results, minutes instead of hours at scale)")
+    ap.add_argument("--windowed", action="store_true",
+                    help="sim mode: windowed cross-replica event loop "
+                         "(WindowedClusterSim — bitwise-identical "
+                         "results, no global event heap)")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="sim mode: shard replicas over N forked worker "
+                         "processes (stale-view window routing; 0 = "
+                         "in-process twin of the same loop)")
+    ap.add_argument("--window", type=float, default=None,
+                    help="sharded mode window length in trace seconds "
+                         "(default: the cluster heartbeat interval)")
+    ap.add_argument("--bounded-metrics", action="store_true",
+                    help="bounded-memory percentile sketches "
+                         "(StreamingSummary(bounded=True); needed at "
+                         "10⁶ scale)")
     ap.add_argument("--speed", type=float, default=200.0,
                     help="frontend mode: trace-time compression (200 = "
                          "replay 200x faster than the trace)")
@@ -297,24 +315,41 @@ def _main(argv: Optional[list] = None) -> None:
         from .executor import (AnalyticalExecutor, InstanceHardware,
                                QWEN2_7B)
         from .vector import VectorClusterSim
+        from .windowed import WindowedClusterSim
         ex = AnalyticalExecutor(QWEN2_7B, InstanceHardware(chips=4))
         est, _ = ex.fit_estimator(n=200)
-        router = {"gorouting": lambda: GoRouting(
-                      est, RouterConfig(pd_mode="coloc")),
-                  "min_load": lambda: MinLoad(est),
-                  "round_robin": lambda: RoundRobin()}[args.router]()
-        sim_cls = VectorClusterSim if args.vector else ClusterSim
-        cs = sim_cls(lambda: make_policy(args.sched), router, ex, est,
-                     EngineConfig(w_p=args.w_p),
-                     ClusterConfig(pd_mode="coloc",
-                                   n_prefill=args.replicas,
-                                   prefix_cache=not args.no_prefix_cache))
-        if args.stream:
-            rep = replay_sim_stream(cs, reqs, w_p=args.w_p)
+
+        def make_router():
+            return {"gorouting": lambda: GoRouting(
+                        est, RouterConfig(pd_mode="coloc")),
+                    "min_load": lambda: MinLoad(est),
+                    "round_robin": lambda: RoundRobin()}[args.router]()
+
+        sim_cls = (WindowedClusterSim if (args.windowed or args.workers)
+                   else VectorClusterSim if args.vector else ClusterSim)
+        ccfg = ClusterConfig(pd_mode="coloc", n_prefill=args.replicas,
+                             prefix_cache=not args.no_prefix_cache)
+
+        def factory():
+            return sim_cls(lambda: make_policy(args.sched), make_router(),
+                           ex, est, EngineConfig(w_p=args.w_p), ccfg)
+
+        if args.workers:
+            from .shard import replay_sim_sharded
+            rep, extras = replay_sim_sharded(
+                factory, reqs, workers=args.workers, window=args.window,
+                w_p=args.w_p, bounded=args.bounded_metrics)
+            extra = {"prefill_tokens": extras["counters"]["prefill_tokens"],
+                     "windows": extras["windows"],
+                     "workers": extras["workers"]}
         else:
-            rep = replay_sim(cs, list(reqs), w_p=args.w_p)
-        extra = {"prefill_tokens": sum(e.prefill_tokens
-                                       for e in cs.engines.values())}
+            cs = factory()
+            if args.stream:
+                rep = replay_sim_stream(cs, reqs, w_p=args.w_p)
+            else:
+                rep = replay_sim(cs, list(reqs), w_p=args.w_p)
+            extra = {"prefill_tokens": sum(e.prefill_tokens
+                                           for e in cs.engines.values())}
     else:
         fe, cfg = smoke_frontend(args.replicas,
                                  prefix_cache=not args.no_prefix_cache,

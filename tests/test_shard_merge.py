@@ -1,0 +1,242 @@
+"""Shard-merge exactness: the reductions the sharded replay relies on.
+
+``StreamingSummary.merge`` and ``merge_counters`` must reproduce the
+unsharded metrics from ANY partition of a trace — integer counters and
+histogram bins add exactly, TDG gain sums are exact for the bundled
+integer-weight workloads, and ``np.percentile`` sorts its inputs so
+buffer concatenation order cannot matter.  The bounded (``_LogHist``)
+variant additionally guarantees p50/p99 within 1% of exact at 10⁵
+samples.  Finally, the multiprocess replay itself must be partition-
+independent: ``workers=0`` (in-process twin) and forked workers produce
+identical per-request results, summaries and engine counters."""
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, GoRouting, RouterConfig
+from repro.core.slidebatching import SlideBatching
+from repro.sim import (AnalyticalExecutor, ClusterConfig,
+                       InstanceHardware, QWEN2_7B, StreamingSummary,
+                       WindowedClusterSim, iter_scale_trace,
+                       merge_counters)
+from repro.sim.metrics import _Buf, _LogHist
+from repro.sim.shard import ENGINE_COUNTERS
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(not HAVE_HYPOTHESIS,
+                                      reason="hypothesis not installed")
+
+
+@pytest.fixture(scope="module")
+def exec_est():
+    ex = AnalyticalExecutor(QWEN2_7B, InstanceHardware(chips=4))
+    est, _ = ex.fit_estimator(n=200)
+    return ex, est
+
+
+def make_factory(ex, est, n_prefill=4):
+    def factory():
+        return WindowedClusterSim(
+            lambda: SlideBatching(),
+            GoRouting(est, RouterConfig(pd_mode="coloc")),
+            ex, est, EngineConfig(w_p=4.0),
+            ClusterConfig(pd_mode="coloc", n_prefill=n_prefill))
+    return factory
+
+
+def trace(n, rate, seed=7):
+    reqs = list(iter_scale_trace(n, rate=rate, seed=seed))
+    for i, r in enumerate(reqs):
+        r.rid = i
+    return reqs
+
+
+@pytest.fixture(scope="module")
+def pool(exec_est):
+    """Deterministic set of terminated requests for partition tests —
+    real sim output, so every metric field is mutually consistent."""
+    ex, est = exec_est
+    cs = make_factory(ex, est, n_prefill=2)()
+    reqs = trace(240, 900.0)
+    cs.run(reqs)
+    assert sum(r.finish_time is not None for r in reqs) > 100
+    return reqs
+
+
+def fold(reqs, bounded):
+    s = StreamingSummary(w_p=4.0, bounded=bounded)
+    for r in reqs:
+        s.add(r)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# partition-merge properties
+# ---------------------------------------------------------------------------
+
+@needs_hypothesis
+@pytest.mark.parametrize("bounded", [False, True])
+def test_partition_merge_property(pool, bounded):
+    """ANY assignment of requests to shards merges back to the
+    unsharded summary — same Summary dataclass, field for field."""
+    whole = fold(pool, bounded).summary()
+
+    @given(st.data())
+    @settings(max_examples=25, deadline=None)
+    def check(data):
+        n_shards = data.draw(st.integers(1, 5))
+        assign = data.draw(st.lists(st.integers(0, n_shards - 1),
+                                    min_size=len(pool),
+                                    max_size=len(pool)))
+        shards = [StreamingSummary(w_p=4.0, bounded=bounded)
+                  for _ in range(n_shards)]
+        for r, s in zip(pool, assign):
+            shards[s].add(r)
+        merged = shards[0]
+        for s in shards[1:]:
+            merged.merge(s)
+        assert merged.summary() == whole
+
+    check()
+
+
+@needs_hypothesis
+def test_counter_merge_property():
+    """Per-shard engine-counter dicts add to the global dict for any
+    split of the counts."""
+    @given(st.data())
+    @settings(max_examples=50, deadline=None)
+    def check(data):
+        totals = {k: data.draw(st.integers(0, 10 ** 9))
+                  for k in ENGINE_COUNTERS}
+        n_shards = data.draw(st.integers(1, 4))
+        shards = [dict.fromkeys(ENGINE_COUNTERS, 0)
+                  for _ in range(n_shards)]
+        for k, total in totals.items():
+            left = total
+            for s in shards[:-1]:
+                s[k] = data.draw(st.integers(0, left))
+                left -= s[k]
+            shards[-1][k] = left
+        merged: dict = {}
+        for s in shards:
+            merge_counters(merged, s)
+        assert merged == totals
+
+    check()
+
+
+def test_merge_incompatible_raises():
+    with pytest.raises(ValueError):
+        StreamingSummary(w_p=4.0).merge(StreamingSummary(w_p=1.0))
+    with pytest.raises(ValueError):
+        StreamingSummary(bounded=True).merge(StreamingSummary())
+
+
+# ---------------------------------------------------------------------------
+# bounded-sketch accuracy
+# ---------------------------------------------------------------------------
+
+def test_loghist_accuracy_1e5():
+    """p50/p99 of the bounded sketch within 1% of exact on 10⁵ samples
+    spanning the TTFT/TPOT range, and exact under partition merge."""
+    rng = np.random.default_rng(0)
+    xs = np.exp(rng.normal(-3.0, 1.5, 100_000))   # ~50us .. ~10s
+    whole = _LogHist()
+    parts = [_LogHist() for _ in range(4)]
+    for i, v in enumerate(xs):
+        whole.append(float(v))
+        parts[i % 4].append(float(v))
+    merged = parts[0]
+    for p in parts[1:]:
+        merged.merge(p)
+    for q in (50, 90, 99):
+        exact = float(np.percentile(xs, q))
+        approx = whole.percentile(q)
+        assert abs(approx - exact) / exact < 0.01, (q, approx, exact)
+        assert merged.percentile(q) == whole.percentile(q)
+
+
+def test_buf_merge_matches_concat():
+    rng = np.random.default_rng(1)
+    xs = rng.random(5000)
+    a, b = _Buf(), _Buf()
+    for v in xs[:1200]:
+        a.append(float(v))
+    for v in xs[1200:]:
+        b.append(float(v))
+    a.merge(b)
+    assert len(a) == len(xs)
+    assert a.percentile(99) == float(np.percentile(xs, 99))
+
+
+# ---------------------------------------------------------------------------
+# multiprocess partition-independence
+# ---------------------------------------------------------------------------
+
+_WORKERS_IDENTITY_SCRIPT = """
+from repro.core import EngineConfig, GoRouting, RouterConfig
+from repro.core.slidebatching import SlideBatching
+from repro.sim import (AnalyticalExecutor, ClusterConfig,
+                       InstanceHardware, QWEN2_7B, WindowedClusterSim,
+                       iter_scale_trace, replay_sim_sharded)
+
+ex = AnalyticalExecutor(QWEN2_7B, InstanceHardware(chips=4))
+est, _ = ex.fit_estimator(n=200)
+
+
+def factory():
+    return WindowedClusterSim(
+        lambda: SlideBatching(),
+        GoRouting(est, RouterConfig(pd_mode="coloc")),
+        ex, est, EngineConfig(w_p=4.0),
+        ClusterConfig(pd_mode="coloc", n_prefill=4))
+
+
+def trace():
+    reqs = list(iter_scale_trace(600, rate=300.0, seed=7))
+    for i, r in enumerate(reqs):
+        r.rid = i
+    return reqs
+
+
+results = {}
+for w in (0, 2):
+    rep, extras = replay_sim_sharded(factory, trace(), workers=w,
+                                     window=0.5, w_p=4.0, collect=True)
+    sig = sorted((r.rid, tuple(r.out_times), r.finish_time,
+                  r.preemptions) for r in extras["finished"])
+    results[w] = (sig, rep.summary, extras["counters"],
+                  rep.n_completed, rep.n_rejected)
+assert results[0] == results[2], "sharded replay diverged across workers"
+print("IDENTICAL", results[2][3], results[2][4])
+"""
+
+
+def test_workers_identity():
+    """workers=0 (in-process twin of the worker protocol) and forked
+    workers produce IDENTICAL per-request results, merged summaries and
+    engine counters on the same trace.
+
+    Runs in a fresh subprocess: the sim/shard path never imports JAX,
+    but THIS pytest process has it loaded from other test modules, and
+    forking a process that carries JAX's thread pool is the documented
+    deadlock recipe — so the fork happens in a clean interpreter."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    res = subprocess.run([sys.executable, "-c", _WORKERS_IDENTITY_SCRIPT],
+                         capture_output=True, text=True, timeout=600,
+                         env=env)
+    assert res.returncode == 0, res.stderr
+    assert res.stdout.startswith("IDENTICAL"), res.stdout

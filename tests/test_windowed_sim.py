@@ -1,0 +1,118 @@
+"""Windowed ClusterSim equivalence contract (docs/ARCHITECTURE.md):
+the cross-replica event-batched outer loop must reproduce the reference
+simulator EXACTLY — per-request token timestamps, finish times and
+preemption counts — on seeded coloc traces across load regimes,
+speculative decoding, streaming mode and time-bounded runs; non-coloc
+traces must transparently fall back to the reference loop."""
+import pytest
+
+from repro.core import EngineConfig, GoRouting, RouterConfig
+from repro.core.slidebatching import SlideBatching
+from repro.sim import (AnalyticalExecutor, ClusterConfig, ClusterSim,
+                       InstanceHardware, QWEN2_7B, WindowedClusterSim,
+                       iter_scale_trace, spec_counters)
+
+
+@pytest.fixture(scope="module")
+def exec_est():
+    ex = AnalyticalExecutor(QWEN2_7B, InstanceHardware(chips=4))
+    est, _ = ex.fit_estimator(n=200)
+    return ex, est
+
+
+def make_cluster(ex, est, cls, *, pd_mode="coloc", n_prefill=2,
+                 n_decode=0, spec_k=0):
+    return cls(lambda: SlideBatching(),
+               GoRouting(est, RouterConfig(pd_mode=pd_mode)),
+               ex, est, EngineConfig(w_p=4.0, spec_k=spec_k),
+               ClusterConfig(pd_mode=pd_mode, n_prefill=n_prefill,
+                             n_decode=n_decode))
+
+
+def trace(n, rate, seed=7):
+    reqs = list(iter_scale_trace(n, rate=rate, seed=seed))
+    # pin rids: the spec acceptance draw is keyed on (rid, step) and the
+    # process-global rid counter depends on what ran earlier
+    for i, r in enumerate(reqs):
+        r.rid = i
+    return reqs
+
+
+def signature(reqs):
+    return [(r.rid, tuple(r.out_times), r.finish_time, r.preemptions)
+            for r in reqs]
+
+
+def run_pair(ex, est, n, rate, *, spec_k=0, until=None, kills=None,
+             **kw):
+    out = {}
+    for cls in (ClusterSim, WindowedClusterSim):
+        cs = make_cluster(ex, est, cls, spec_k=spec_k, **kw)
+        reqs = trace(n, rate)
+        cs.run(reqs, until=until, kills=kills)
+        out[cls] = (signature(reqs),
+                    spec_counters(cs) if spec_k else None)
+    return out[ClusterSim], out[WindowedClusterSim]
+
+
+@pytest.mark.parametrize("n,rate", [(400, 600.0), (300, 2000.0)])
+def test_equivalence_load_matrix(exec_est, n, rate):
+    """Normal contention and deep overload (rejections exercised)."""
+    ex, est = exec_est
+    ref, win = run_pair(ex, est, n, rate)
+    assert ref == win
+
+
+def test_equivalence_spec(exec_est):
+    """Speculative decoding: depth assignment, the (rid, step)-keyed
+    acceptance draw, and the aggregated counters must all agree."""
+    ex, est = exec_est
+    ref, win = run_pair(ex, est, 300, 600.0, spec_k=2)
+    assert ref == win
+    assert win[1]["spec_proposed"] > 0
+
+
+def test_equivalence_until(exec_est):
+    """Time-bounded runs cut off at the same event horizon."""
+    ex, est = exec_est
+    ref, win = run_pair(ex, est, 400, 600.0, until=2.0)
+    assert ref == win
+
+
+def test_run_stream_matches_run(exec_est):
+    """Streaming mode: same per-request physics, every completion
+    delivered exactly once.  Callback ORDER within a heartbeat window is
+    replica-grouped rather than globally time-interleaved (the one
+    documented non-contract difference), so completions are compared as
+    a set keyed by rid."""
+    ex, est = exec_est
+    cs_ref = make_cluster(ex, est, ClusterSim)
+    reqs = trace(400, 600.0)
+    cs_ref.run(reqs)
+
+    cs_win = make_cluster(ex, est, WindowedClusterSim)
+    done = []
+    n = cs_win.run_stream(iter(trace(400, 600.0)),
+                          on_finished=done.append)
+    assert n == 400
+    want = {r.rid: (tuple(r.out_times), r.finish_time, r.preemptions)
+            for r in reqs if r.finish_time is not None}
+    got = {r.rid: (tuple(r.out_times), r.finish_time, r.preemptions)
+           for r in done}
+    assert got == want
+
+
+def test_disagg_falls_back(exec_est):
+    """Non-coloc traces route through the reference loop (HANDOFF
+    tie-breaking needs the global heap), so results stay identical."""
+    ex, est = exec_est
+    ref, win = run_pair(ex, est, 200, 400.0, pd_mode="disagg",
+                        n_prefill=1, n_decode=1)
+    assert ref == win
+
+
+def test_kills_fall_back(exec_est):
+    """Kill schedules force the reference loop; results stay identical."""
+    ex, est = exec_est
+    ref, win = run_pair(ex, est, 300, 600.0, kills=[(0.5, 0)])
+    assert ref == win

@@ -27,6 +27,8 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
 import sys
 import time
 
@@ -465,11 +467,53 @@ def collect(args) -> tuple[dict, list[str]]:
     return payload, failures
 
 
+def _git_commit() -> str:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, timeout=10,
+                             cwd=root).stdout.strip()
+        return out or "unknown"
+    except OSError:
+        return "unknown"
+
+
+def merge_trajectory(payload: dict, path: str) -> None:
+    """Attach the commit-keyed perf trajectory to ``payload`` before it
+    is written: prior entries from the existing file are kept verbatim
+    (append-only, timestamp-free), a prior entry for the SAME commit is
+    replaced, and the current run's headline numbers become the newest
+    point — so the checked-in file accumulates a commit-over-commit
+    speed trace that ``--bench-check`` can gate against."""
+    traj = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                traj = list(json.load(f).get("trajectory", []))
+        except (OSError, ValueError):
+            pass
+    entry = {
+        "commit": _git_commit(),
+        "prefill_tok_per_s":
+            payload["prefill"]["overlapped"]["prefill_tok_per_s"],
+        "prefill_speedup": payload["prefill"]["speedup"],
+        "fused_tpot_ms":
+            payload["decode_fusion"]["fused"]["tpot_proxy_ms"],
+    }
+    traj = [e for e in traj if e.get("commit") != entry["commit"]]
+    traj.append(entry)
+    payload["trajectory"] = traj
+
+
 def check_bench_file(path: str, payload: dict) -> list[str]:
     """Validate a checked-in BENCH_engine_step.json: schema + the
     correctness facts (identical streams, gates passed) must hold in the
-    committed trajectory point.  Wall-clock numbers are trajectory data,
-    not compared exactly — the current run is gated on its own ratios."""
+    committed trajectory point, and the current run's prefill throughput
+    may not collapse below HALF the best recorded trajectory entry (the
+    generous factor absorbs shared-runner noise while still catching a
+    real hot-loop regression).  Wall-clock numbers are otherwise
+    trajectory data, not compared exactly — the current run is gated on
+    its own ratios."""
     errors = []
     try:
         with open(path) as f:
@@ -488,6 +532,12 @@ def check_bench_file(path: str, payload: dict) -> list[str]:
         errors.append(f"{path}: committed run did not pass its gates")
     if not payload["gates"]["passed"]:
         errors.append("current run failed its gates (see above)")
+    best = max((e.get("prefill_tok_per_s", 0)
+                for e in ref.get("trajectory", [])), default=0)
+    cur = payload["prefill"]["overlapped"]["prefill_tok_per_s"]
+    if best and cur < 0.5 * best:
+        errors.append(f"prefill throughput {cur} tok/s fell below half "
+                      f"the best trajectory point ({best} tok/s)")
     return errors
 
 
@@ -519,6 +569,7 @@ def main(argv=None) -> int:
     payload, failures = collect(args)
     print(json.dumps(payload, indent=1))
     if args.bench_out:
+        merge_trajectory(payload, args.bench_out)
         with open(args.bench_out, "w") as f:
             json.dump(payload, f, indent=1)
             f.write("\n")
